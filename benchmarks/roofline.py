@@ -1,0 +1,157 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + \
+    " --xla_force_host_platform_device_count=512"
+
+"""Roofline analysis (assignment deliverable g).
+
+Per (arch x shape) on the single-pod mesh:
+  compute term    = HLO_FLOPs/device / 197 TFLOP/s (bf16, v5e)
+  memory term     = HLO_bytes/device / 819 GB/s HBM
+  collective term = collective_bytes/device / 50 GB/s link
+
+XLA's cost_analysis counts a while-loop (scan) body ONCE, so raw numbers
+undercount scanned stacks ~n_periods-fold.  We correct by Δ-extrapolation:
+lower the same cell unrolled with prefix+1 and prefix+2 periods; the
+difference is one period's true cost; corrected = raw + (n_periods−1)·Δ.
+Collective bytes are already trip-count-corrected by the HLO parser.
+
+MODEL_FLOPS = 6·N_active·D (train) / 2·N_active·D (inference) — the
+useful-work yardstick; ratio MODEL_FLOPS/HLO_FLOPs exposes remat/padding/
+redundancy waste.
+
+  PYTHONPATH=src python -m benchmarks.roofline [--cells arch:shape,...]
+"""
+
+import argparse
+import json
+import time
+
+PEAK_FLOPS = 197e12          # bf16 / chip (TPU v5e)
+HBM_BW = 819e9               # bytes/s / chip
+LINK_BW = 50e9               # bytes/s / link (ICI)
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+DRYRUN = os.path.join(RESULTS, "dryrun", "single")
+
+
+def _delta_costs(arch: str, shape: str, mesh) -> tuple:
+    """(flops_delta, bytes_delta) for ONE scanned period, by unroll diff."""
+    from repro.configs import get_config
+    from repro.launch.cells import build_cell
+    from repro.models.transformer import plan_segments
+    cfg = get_config(arch)
+    segs = plan_segments(cfg)
+    if segs.n_periods <= 1:
+        return 0.0, 0.0, 1
+    pre, per = len(segs.prefix), len(segs.period)
+    out = []
+    for k in (1, 2):
+        cell = build_cell(arch, shape, mesh, layers_override=pre + k * per,
+                          scan_override=False)
+        cost = cell.fn.lower(*cell.abstract_args).compile().cost_analysis()
+        out.append((cost.get("flops", 0.0), cost.get("bytes accessed", 0.0)))
+    return out[1][0] - out[0][0], out[1][1] - out[0][1], segs.n_periods
+
+
+def _model_flops_per_device(arch: str, shape: str, n_chips: int) -> float:
+    from repro.common.config import SHAPES
+    from repro.configs import get_config
+    from repro.models.transformer import active_param_count
+    cfg = get_config(arch)
+    sc = SHAPES[shape]
+    n_active = active_param_count(cfg)
+    if sc.kind == "train":
+        tokens = sc.global_batch * sc.seq_len
+        total = 6.0 * n_active * tokens
+    elif sc.kind == "prefill":
+        tokens = sc.global_batch * sc.seq_len
+        total = 2.0 * n_active * tokens
+    else:
+        total = 2.0 * n_active * sc.global_batch     # one token per sequence
+    return total / n_chips
+
+
+def analyze_cell(arch: str, shape: str, *, correct_scan: bool = True) -> dict:
+    from repro.launch.mesh import make_production_mesh
+    path = os.path.join(DRYRUN, f"{arch}__{shape}.json")
+    with open(path) as f:
+        rec = json.load(f)
+    if rec["status"] != "ok":
+        return {"arch": arch, "shape": shape, "status": rec["status"],
+                "reason": rec.get("reason", rec.get("error", ""))}
+    mesh = make_production_mesh()
+    n_chips = 256
+    flops = rec["flops_per_device"]
+    byts = rec["bytes_per_device"]
+    if correct_scan:
+        df, db, n_per = _delta_costs(arch, shape, mesh)
+        flops = flops + (n_per - 1) * df
+        byts = byts + (n_per - 1) * db
+    coll = rec["collective_bytes_per_device"]
+    t_c = flops / PEAK_FLOPS
+    t_m = byts / HBM_BW
+    t_x = coll / LINK_BW
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))[1]
+    mf = _model_flops_per_device(arch, shape, n_chips)
+    out = {
+        "arch": arch, "shape": shape, "status": "ok",
+        "flops_per_device": flops, "bytes_per_device": byts,
+        "collective_bytes_per_device": coll,
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+        "dominant": dom,
+        "model_flops_per_device": mf,
+        "useful_ratio": mf / max(flops, 1.0),
+        "roofline_fraction": t_c / max(t_c, t_m, t_x),
+        "temp_bytes": rec["memory"]["temp_bytes"],
+    }
+    return out
+
+
+def suggestion(row: dict) -> str:
+    if row.get("status") != "ok":
+        return ""
+    d = row["dominant"]
+    if d == "collective":
+        return ("cast params to compute dtype before FSDP gather; "
+                "reduce-scatter gradients instead of all-reduce")
+    if d == "memory":
+        if row["shape"].startswith("decode"):
+            return "KV/state-cache bytes dominate: quantize cache, batch wider"
+        return "fuse attention (blockwise) to avoid S^2 score materialization"
+    return "compute-bound: raise MXU utilization (tile alignment, bf16 accum)"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cells", default="")
+    ap.add_argument("--no-correct", action="store_true")
+    args = ap.parse_args()
+    from repro.common.config import SHAPES
+    from repro.configs import ARCH_IDS
+    cells = ([tuple(c.split(":")) for c in args.cells.split(",") if c]
+             or [(a, s) for a in ARCH_IDS for s in SHAPES])
+    rows = []
+    hdr = ("arch,shape,compute_s,memory_s,collective_s,dominant,"
+           "useful_ratio,roofline_fraction")
+    print(hdr)
+    for arch, shape in cells:
+        try:
+            row = analyze_cell(arch, shape, correct_scan=not args.no_correct)
+        except FileNotFoundError:
+            continue
+        rows.append(row)
+        if row["status"] != "ok":
+            print(f"{arch},{shape},SKIP({row['reason'][:40]})")
+            continue
+        row["suggestion"] = suggestion(row)
+        print(f"{arch},{shape},{row['compute_s']:.3f},{row['memory_s']:.3f},"
+              f"{row['collective_s']:.3f},{row['dominant']},"
+              f"{row['useful_ratio']:.2f},{row['roofline_fraction']:.2f}")
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, "roofline.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"# wrote {len(rows)} rows to results/roofline.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,206 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Usage:  PYTHONPATH=src python -m benchmarks.run [--only table3,fig10] [--fast]
+
+Prints ``name,value,derived`` CSV lines and writes JSON artifacts to
+benchmarks/results/.  --fast shrinks datasets/trials for CI-style runs
+(the default sizes reproduce the paper's regimes; see DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+from benchmarks import baselines as bl
+from repro.data import synth
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+def _datasets(fast: bool):
+    s = 0.35 if fast else 0.7
+    return {
+        "citations": lambda: synth.citations(n_docs=int(1200 * s)),
+        "police_records": lambda: synth.police_records(
+            n_incidents=int(400 * s), reports_per_incident=3),
+        "categorize": lambda: synth.categorize(n_items=int(2500 * s)),
+        "biodex": lambda: synth.biodex(n_notes=int(2000 * s)),
+        "movies": lambda: synth.movies_pages(n_movies=int(500 * s)),
+        "products": lambda: synth.products(n_products=int(800 * s)),
+    }
+
+
+def _emit(rows, name):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, f"{name}.json"), "w") as f:
+        json.dump(rows, f, indent=1, default=str)
+
+
+def table2_guarantees(fast: bool):
+    """Table 2: observed recall + failure rate, T=90%, delta=10%."""
+    print("# table2: avg recall and failure rate over trials (biodex analogue)")
+    trials = 8 if fast else 15
+    rows = []
+    for method, fn in [("SUPG(LOTUS)", bl.run_supg),
+                       ("BARGAIN", bl.run_bargain),
+                       ("FDJ", bl.run_fdj)]:
+        recalls, fails = [], 0
+        for t in range(trials):
+            ds = synth.biodex(n_notes=400 if fast else 700, n_terms=60, seed=t)
+            r = fn(ds, target=0.9, seed=t)
+            recalls.append(r["recall"])
+            fails += int(r["recall"] < 0.9)
+        row = {"method": method, "avg_recall": float(np.mean(recalls)),
+               "pct_failed": 100.0 * fails / trials, "trials": trials}
+        rows.append(row)
+        print(f"table2,{method},avg_recall={row['avg_recall']:.3f},"
+              f"pct_failed={row['pct_failed']:.0f}")
+    _emit(rows, "table2")
+
+
+def table3_cost_ratio(fast: bool):
+    """Table 3: cost ratio (%) at T=90% across the 6 dataset analogues."""
+    print("# table3: cost ratio (% of naive) at T=0.9")
+    rows = []
+    for name, mk in _datasets(fast).items():
+        for method, fn in [("BARGAIN", bl.run_bargain), ("FDJ", bl.run_fdj),
+                           ("optimal_cascade", bl.run_optimal_cascade)]:
+            ds = mk()
+            t0 = time.time()
+            r = fn(ds) if method != "optimal_cascade" else fn(ds, target=0.9)
+            row = {"dataset": name, "method": method,
+                   "cost_ratio_pct": 100 * r["cost_ratio"],
+                   "recall": r["recall"], "precision": r["precision"],
+                   "wall_s": time.time() - t0}
+            rows.append(row)
+            print(f"table3,{name},{method},cost_ratio_pct={row['cost_ratio_pct']:.1f},"
+                  f"recall={r['recall']:.3f}")
+    _emit(rows, "table3")
+
+
+def fig7_datasize(fast: bool):
+    """Fig 7: cost ratio vs |L| (police analogue)."""
+    print("# fig7: cost ratio vs data size")
+    sizes = [100, 200, 400] if fast else [100, 200, 400, 600]
+    rows = []
+    for n in sizes:
+        ds = synth.police_records(n_incidents=n, reports_per_incident=3)
+        for method, fn in [("BARGAIN", bl.run_bargain), ("FDJ", bl.run_fdj)]:
+            r = fn(ds)
+            rows.append({"n_records": ds.n_l, "method": method,
+                         "cost_ratio_pct": 100 * r["cost_ratio"],
+                         "recall": r["recall"]})
+            print(f"fig7,n={ds.n_l},{method},cost_ratio_pct={100*r['cost_ratio']:.1f}")
+    _emit(rows, "fig7")
+
+
+def fig8_targets(fast: bool):
+    """Fig 8: cost ratio vs recall target (one dataset per category)."""
+    print("# fig8: cost ratio vs recall target")
+    targets = [0.8, 0.9] if fast else [0.75, 0.8, 0.85, 0.9, 0.95]
+    gens = {"movies": lambda: synth.movies_pages(n_movies=250 if fast else 400),
+            "police_records": lambda: synth.police_records(
+                n_incidents=150 if fast else 300, reports_per_incident=3),
+            "categorize": lambda: synth.categorize(n_items=600 if fast else 1200)}
+    rows = []
+    for dname, mk in gens.items():
+        for t in targets:
+            for method, fn in [("BARGAIN", bl.run_bargain), ("FDJ", bl.run_fdj)]:
+                ds = mk()
+                r = fn(ds, target=t)
+                rows.append({"dataset": dname, "target": t, "method": method,
+                             "cost_ratio_pct": 100 * r["cost_ratio"],
+                             "recall": r["recall"]})
+                print(f"fig8,{dname},T={t},{method},"
+                      f"cost_ratio_pct={100*r['cost_ratio']:.1f},recall={r['recall']:.3f}")
+    _emit(rows, "fig8")
+
+
+def fig9_breakdown(fast: bool):
+    """Fig 9: FDJ cost breakdown across datasets and targets."""
+    print("# fig9: FDJ cost breakdown (percent of naive cost)")
+    targets = [0.8, 0.9] if fast else [0.8, 0.9, 0.95]
+    rows = []
+    for name, mk in list(_datasets(fast).items()):
+        for t in targets:
+            ds = mk()
+            r = bl.run_fdj(ds, target=t)
+            row = {"dataset": name, "target": t, **{
+                k: 100 * v for k, v in r["breakdown"].items()}}
+            rows.append(row)
+            print(f"fig9,{name},T={t}," + ",".join(
+                f"{k}={100*v:.2f}" for k, v in r["breakdown"].items()))
+    _emit(rows, "fig9")
+
+
+def fig10_characteristics(fast: bool):
+    """Fig 10: synthetic sweeps — entities per sentence; filler length."""
+    print("# fig10: data-characteristic sweeps (movie-likes generator)")
+    rows = []
+    n = 150 if fast else 300
+    for p in ([1, 3] if fast else [1, 2, 3, 4]):
+        ds = synth.movie_likes(n=n, persons_per_sentence=p, filler_sentences=1)
+        for method, fn in [("FDJ", bl.run_fdj),
+                           ("optimal_cascade", bl.run_optimal_cascade)]:
+            r = fn(ds)
+            rows.append({"sweep": "persons", "value": p, "method": method,
+                         "cost_ratio_pct": 100 * r["cost_ratio"],
+                         "recall": r["recall"]})
+            print(f"fig10,persons={p},{method},cost_ratio_pct={100*r['cost_ratio']:.1f}")
+    for f in ([0, 4] if fast else [0, 2, 4, 8]):
+        ds = synth.movie_likes(n=n, persons_per_sentence=1, filler_sentences=f)
+        for method, fn in [("FDJ", bl.run_fdj),
+                           ("optimal_cascade", bl.run_optimal_cascade)]:
+            r = fn(ds)
+            rows.append({"sweep": "filler", "value": f, "method": method,
+                         "cost_ratio_pct": 100 * r["cost_ratio"],
+                         "recall": r["recall"]})
+            print(f"fig10,filler={f},{method},cost_ratio_pct={100*r['cost_ratio']:.1f}")
+    _emit(rows, "fig10")
+
+
+def kernel_bench(fast: bool):
+    """Systems table: fused CNF kernel vs unfused XLA reference (FLOPs/bytes
+    from cost_analysis; see EXPERIMENTS.md §Perf)."""
+    from benchmarks import kernels as kb
+    kb.main(fast)
+
+
+ALL = {
+    "table2": table2_guarantees,
+    "table3": table3_cost_ratio,
+    "fig7": fig7_datasize,
+    "fig8": fig8_targets,
+    "fig9": fig9_breakdown,
+    "fig10": fig10_characteristics,
+    "kernels": kernel_bench,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+    only = [s for s in args.only.split(",") if s]
+    t0 = time.time()
+    for name, fn in ALL.items():
+        if only and name not in only:
+            continue
+        try:
+            fn(args.fast)
+        except Exception as e:  # keep the suite running
+            import traceback
+            traceback.print_exc()
+            print(f"{name},ERROR,{type(e).__name__}: {e}")
+    print(f"# total wall time: {time.time()-t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Quickstart: a complete FDJ semantic join in ~20 lines.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.configs.fdj_join import smoke_config
+from repro.core.costs import naive_join_cost
+from repro.core.join import fdj_join
+from repro.data import synth
+from repro.data.simulated_llm import SimulatedExtractor, SimulatedProposer
+
+
+def main():
+    # a self-join over synthetic police reports: "same incident?"
+    ds = synth.police_records(n_incidents=150, reports_per_incident=3)
+    oracle = ds.make_oracle()                 # simulated LLM (paper §8.1)
+    res = fdj_join(ds, oracle, SimulatedProposer(ds), SimulatedExtractor(ds),
+                   smoke_config())
+    naive = naive_join_cost(ds.texts_l, ds.texts_r)
+    print(f"dataset: {ds.n_l} x {ds.n_r} records, {ds.n_positive} true matches")
+    print(f"featurizations: {[s.key for s in res.specs]}")
+    print(f"decomposition (CNF clause feature-indices): {res.scaffold.clauses}")
+    print(f"thresholds: {res.theta.round(3).tolist()}  (adjusted target T'={res.t_prime:.3f})")
+    print(f"recall={res.recall:.3f} precision={res.precision:.3f} "
+          f"(targets: 0.9 / 1.0, met={res.met_target})")
+    print(f"cost: ${res.cost.total:.2f} vs naive ${naive:.2f} "
+          f"-> ratio {res.cost.total/naive:.1%}")
+
+
+if __name__ == "__main__":
+    main()

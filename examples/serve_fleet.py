@@ -1,0 +1,35 @@
+"""End-to-end driver (serve kind): batched request serving with a reduced
+backbone, then a fault-tolerant mini-training run with injected failure —
+the two runtime paths a production deployment exercises.
+
+  PYTHONPATH=src python examples/serve_fleet.py [--arch phi4-mini-3.8b]
+"""
+import argparse
+import shutil
+
+from repro.launch.serve import serve
+from repro.launch.train import SimulatedFailure, train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="phi4-mini-3.8b")
+    args = ap.parse_args()
+    print("== batched serving ==")
+    out = serve(args.arch, n_requests=12, max_new=10, batch_slots=4)
+    print(out)
+    print("== fault-tolerant training (crash at step 9, auto-resume) ==")
+    ckpt = "/tmp/repro_example_ckpt"
+    shutil.rmtree(ckpt, ignore_errors=True)
+    try:
+        train(args.arch, steps_n=16, batch=2, seq=64, ckpt_dir=ckpt,
+              ckpt_every=4, fail_at=9)
+    except SimulatedFailure as e:
+        print(f"crashed as planned: {e}")
+    out = train(args.arch, steps_n=16, batch=2, seq=64, ckpt_dir=ckpt,
+                ckpt_every=4)
+    print(f"resumed and finished: {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Monetary cost accounting (paper §8.1 methodology).
+
+Every oracle/extraction/embedding invocation is *simulated* against ground
+truth, but its cost is charged as if the real prompt had been sent: tokens
+are counted from the prompt string that would have been constructed, priced
+with the per-model $/Mtok constants below (GPT-4.1-class join/extraction LLM,
+o3-class featurization-generation LLM, text-embedding-3-large-class E).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+# $ per 1M tokens (input, output) — OpenAI list prices (2025)
+PRICE_JOIN_LLM_IN = 2.00       # GPT-4.1 input
+PRICE_JOIN_LLM_OUT = 8.00      # GPT-4.1 output
+PRICE_GEN_LLM_IN = 2.00        # o3 input
+PRICE_GEN_LLM_OUT = 8.00       # o3 output
+PRICE_EMBED = 0.13             # text-embedding-3-large
+
+CHARS_PER_TOKEN = 4.0          # standard approximation
+
+
+def n_tokens(text: str) -> int:
+    return max(1, int(len(text) / CHARS_PER_TOKEN))
+
+
+@dataclasses.dataclass
+class CostLedger:
+    """Accumulates costs by category (paper Fig 9 breakdown)."""
+    labeling: float = 0.0        # LLM labels for sampled pairs
+    construction: float = 0.0    # featurization-generation LLM calls
+    inference: float = 0.0       # feature extraction + embeddings
+    refinement: float = 0.0      # LLM on predicted-positive pairs
+
+    def charge_label(self, prompt_tokens: int, output_tokens: int = 1):
+        self.labeling += (prompt_tokens * PRICE_JOIN_LLM_IN
+                          + output_tokens * PRICE_JOIN_LLM_OUT) / 1e6
+
+    def charge_refine(self, prompt_tokens: int, output_tokens: int = 1):
+        self.refinement += (prompt_tokens * PRICE_JOIN_LLM_IN
+                            + output_tokens * PRICE_JOIN_LLM_OUT) / 1e6
+
+    def charge_generation(self, prompt_tokens: int, output_tokens: int):
+        self.construction += (prompt_tokens * PRICE_GEN_LLM_IN
+                              + output_tokens * PRICE_GEN_LLM_OUT) / 1e6
+
+    def charge_extraction(self, prompt_tokens: int, output_tokens: int):
+        self.inference += (prompt_tokens * PRICE_JOIN_LLM_IN
+                           + output_tokens * PRICE_JOIN_LLM_OUT) / 1e6
+
+    def charge_embedding(self, tokens: int):
+        self.inference += tokens * PRICE_EMBED / 1e6
+
+    @property
+    def total(self) -> float:
+        return self.labeling + self.construction + self.inference + self.refinement
+
+    def breakdown(self) -> dict:
+        return {
+            "labeling": self.labeling,
+            "construction": self.construction,
+            "inference": self.inference,
+            "refinement": self.refinement,
+            "total": self.total,
+        }
+
+
+def naive_join_cost(texts_l, texts_r, join_prompt_overhead_tokens: int = 40) -> float:
+    """Cost of the naive all-pairs LLM join (cost-ratio denominator)."""
+    tl = [n_tokens(t) for t in texts_l]
+    tr = [n_tokens(t) for t in texts_r]
+    total_in = sum(tl) * len(tr) + sum(tr) * len(tl) \
+        + join_prompt_overhead_tokens * len(tl) * len(tr)
+    total_out = len(tl) * len(tr)
+    return (total_in * PRICE_JOIN_LLM_IN + total_out * PRICE_JOIN_LLM_OUT) / 1e6

@@ -1,0 +1,223 @@
+"""FDJ — the final algorithm (Alg 6) plus the precision extension (Appx C).
+
+``fdj_join`` wires the full pipeline:
+  1. uniform sample S, oracle labels          (cost: labeling)
+  2. candidate featurizations (Alg 1-3)       (cost: construction+inference)
+  3. logical scaffold (Alg 4) on S
+  4. second sample S', labels                 (cost: labeling)
+  5. T' = adj-target(k+, r, T, δ·)            (offline MC, cached)
+  6. Θ* = argmin FPR s.t. recall_{S'} >= T'   (Eq 4)
+  7. full-corpus extraction for used featurizations (cost: inference)
+  8. blocked CNF evaluation over L×R -> Ŷ     (numpy or Pallas engine)
+  9. refinement: oracle on Ŷ                  (cost: refinement) — precision 1
+     (or Appx-C featurization-precision subsets when T_P < 1)
+
+Evaluation (recall/precision vs ground truth) and the Fig-9 cost breakdown
+come back in ``JoinResult``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+from repro.core import generation, scaffold as scaffold_lib
+from repro.core.adj_target import adj_target
+from repro.core.bargain import bargain_precision_subset
+from repro.core.costs import CostLedger
+from repro.core.featurize import FeaturizationSpec
+from repro.core.scaffold import Scaffold, min_fpr_thresholds
+
+
+@dataclasses.dataclass
+class FDJConfig:
+    recall_target: float = 0.9
+    precision_target: float = 1.0
+    delta: float = 0.1
+    gen_positives: int = 50        # positives for featurization gen + scaffold
+    thresh_positives: int = 200    # positives for threshold selection
+    alpha: int = 3                 # cost-to-cover convergence bound (Alg 3)
+    beta: int = 20                 # demonstration examples per LLM call
+    gamma: float = 0.05            # min cost improvement to extend scaffold
+    max_iter: int = 8              # Alg 1 iterations
+    mc_trials: int = 20000
+    block: int = 4096              # L/R block edge for step-2 evaluation
+    engine: str = "numpy"          # numpy | pallas (step-2 backend)
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class JoinResult:
+    pairs: set                     # final output pairs (i, j)
+    recall: float
+    precision: float
+    cost: CostLedger
+    scaffold: Scaffold
+    specs: list
+    theta: np.ndarray
+    t_prime: float
+    candidate_count: int
+    met_target: bool
+
+
+def _sample_pairs(n_l: int, n_r: int, k: int, rng) -> list:
+    idx = rng.choice(n_l * n_r, size=min(k, n_l * n_r), replace=False)
+    return [(int(i // n_r), int(i % n_r)) for i in idx]
+
+
+def fdj_join(dataset, oracle, proposer, extractor, cfg: FDJConfig) -> JoinResult:
+    """dataset: repro.data.synth.JoinDataset; oracle: core.llm.Oracle;
+    proposer/extractor: generation protocol impls (dataset-owned)."""
+    rng = np.random.default_rng(cfg.seed)
+    ledger = oracle.ledger
+    n_l, n_r = dataset.n_l, dataset.n_r
+    n_pairs = n_l * n_r
+    rate = max(dataset.n_positive, 1) / n_pairs
+    label_cache: dict = {}
+
+    def label(pairs, kind):
+        new = [p for p in pairs if p not in label_cache]
+        if new:
+            labs = oracle.label_pairs(new, kind=kind)
+            for p, l in zip(new, labs):
+                label_cache[p] = bool(l)
+        return np.asarray([label_cache[p] for p in pairs], bool)
+
+    # --- 1. generation sample ------------------------------------------------
+    k_gen = min(int(math.ceil(cfg.gen_positives / rate * 1.25)), n_pairs)
+    s1 = _sample_pairs(n_l, n_r, k_gen, rng)
+    y1 = label(s1, "labeling")
+
+    # --- 2. candidate featurizations ----------------------------------------
+    specs = generation.get_candidate_featurizations(
+        s1, y1, proposer, extractor, dataset.join_prompt, ledger,
+        alpha=cfg.alpha, beta=cfg.beta, max_iter=cfg.max_iter, seed=cfg.seed)
+
+    # --- 3. scaffold ----------------------------------------------------------
+    d1 = extractor.pair_distances(specs, s1, ledger)
+    max_clauses = max(int(math.floor(1.0 / max(1.0 - cfg.recall_target, 1e-9))), 1)
+    sc = scaffold_lib.get_logical_scaffold(d1, y1, cfg.recall_target,
+                                           gamma=cfg.gamma, max_clauses=max_clauses)
+    if sc.n_clauses == 0:
+        # no featurization helps: degenerate to refine-everything (still valid)
+        sc = Scaffold(clauses=[])
+
+    # --- 4. threshold sample --------------------------------------------------
+    k_thr = min(int(math.ceil(cfg.thresh_positives / rate * 1.25)), n_pairs)
+    s2 = _sample_pairs(n_l, n_r, k_thr, rng)
+    y2 = label(s2, "labeling")
+    k_plus = int(y2.sum())
+
+    # --- 5-6. adjusted target + thresholds ------------------------------------
+    used = sc.used_featurizations()
+    used_specs = [specs[i] for i in used]
+    remap = {f: i for i, f in enumerate(used)}
+    sc_local = Scaffold(clauses=[[remap[f] for f in c] for c in sc.clauses])
+    delta_recall = cfg.delta if cfg.precision_target >= 1.0 else cfg.delta / 2.0
+    if sc_local.n_clauses and k_plus > 0:
+        adj = adj_target(k_plus, sc_local.n_clauses, cfg.recall_target,
+                         delta_recall, n_pairs=n_pairs, k_sample=len(s2),
+                         n_trials=cfg.mc_trials, seed=cfg.seed)
+        t_prime = adj.t_prime
+        d2 = extractor.pair_distances(used_specs, s2, ledger)
+        cd2 = sc_local.clause_distances(d2)
+        thr = min_fpr_thresholds(cd2, y2, t_prime)
+        theta = thr.theta
+        feasible = thr.feasible
+    else:
+        t_prime = 1.0
+        theta = np.zeros(0)
+        feasible = False
+
+    if not feasible or not sc_local.n_clauses:
+        # fall back: decomposition admits everything (always-sound)
+        candidates = [(i, j) for i in range(n_l) for j in range(n_r)]
+    else:
+        candidates = _evaluate_cnf_blocked(dataset, extractor, used_specs,
+                                           sc_local, theta, ledger,
+                                           cfg.block, cfg.engine)
+
+    # --- 9. refinement ---------------------------------------------------------
+    out_pairs: set = set()
+    cand_arr = list(candidates)
+    if cfg.precision_target >= 1.0:
+        labs = label(cand_arr, "refinement")
+        out_pairs = {p for p, l in zip(cand_arr, labs) if l}
+    else:
+        out_pairs = _precision_extension(cand_arr, used_specs, extractor, label,
+                                         ledger, cfg, rng)
+
+    truth = dataset.truth_set
+    tp = len(out_pairs & truth)
+    recall = tp / max(len(truth), 1)
+    precision = tp / max(len(out_pairs), 1) if out_pairs else 1.0
+    return JoinResult(
+        pairs=out_pairs, recall=recall, precision=precision, cost=ledger,
+        scaffold=sc, specs=specs, theta=theta, t_prime=t_prime,
+        candidate_count=len(cand_arr),
+        met_target=(recall >= cfg.recall_target - 1e-12
+                    and precision >= cfg.precision_target - 1e-12),
+    )
+
+
+def _evaluate_cnf_blocked(dataset, extractor, used_specs, sc: Scaffold,
+                          theta: np.ndarray, ledger: CostLedger,
+                          block: int, engine: str) -> list:
+    """Step ②: blocked CNF evaluation over the full cross product."""
+    n_l, n_r = dataset.n_l, dataset.n_r
+    feats = extractor.materialize(used_specs, ledger)    # full-corpus FeatureData
+    out = []
+    if engine == "pallas":
+        from repro.kernels.fused_cnf_join import ops as cnf_ops
+        return cnf_ops.evaluate_corpus(feats, sc.clauses, theta, block)
+    for i0 in range(0, n_l, block):
+        il = np.arange(i0, min(i0 + block, n_l))
+        for j0 in range(0, n_r, block):
+            jr = np.arange(j0, min(j0 + block, n_r))
+            ok = None
+            for ci, clause in enumerate(sc.clauses):
+                cd = None
+                for f in clause:
+                    d = feats[f].distance_block(il, jr)
+                    cd = d if cd is None else np.minimum(cd, d)
+                pas = cd <= theta[ci]
+                ok = pas if ok is None else (ok & pas)
+                if not ok.any():
+                    break
+            if ok is None or not ok.any():
+                continue
+            ii, jj = np.nonzero(ok)
+            out.extend(zip((il[ii]).tolist(), (jr[jj]).tolist()))
+    return out
+
+
+def _precision_extension(cand_pairs, used_specs, extractor, label, ledger,
+                         cfg: FDJConfig, rng) -> set:
+    """Appx C: per-featurization precision subsets skip refinement."""
+    if not cand_pairs:
+        return set()
+    remaining = np.arange(len(cand_pairs))
+    accepted: set = set()
+    r = max(len(used_specs), 1)
+    delta1 = cfg.delta / (2.0 * r)
+    for spec in used_specs:
+        if remaining.size == 0:
+            break
+        pairs_sub = [cand_pairs[i] for i in remaining]
+        d = extractor.pair_distances([spec], pairs_sub, ledger)[:, 0]
+
+        def label_fn(idx):
+            return label([pairs_sub[i] for i in idx], "refinement")
+
+        mask = bargain_precision_subset(d, label_fn, cfg.precision_target,
+                                        delta1, rng=rng)
+        accepted |= {pairs_sub[i] for i in np.flatnonzero(mask)}
+        remaining = remaining[~mask]
+    # leftover pairs: oracle refinement (precision 1 on them)
+    left = [cand_pairs[i] for i in remaining]
+    labs = label(left, "refinement")
+    accepted |= {p for p, l in zip(left, labs) if l}
+    return accepted

@@ -1,0 +1,112 @@
+"""HLO-text analysis: collective-traffic accounting for the roofline.
+
+``collective_bytes(hlo_text)`` sums the result-shape bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+op, multiplying ops inside while-loop bodies by the loop trip count
+(recovered from the loop-condition constant — scan-over-layers shows up as
+one while loop of n_periods iterations).
+
+This is a structural estimate (result bytes ~ payload moved once); link-hop
+multipliers for multi-hop ICI rings are applied by the roofline layer, not
+here.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s8": 1, "u8": 1, "pred": 1,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*(?:\([^)]*\))?\s*->", re.M)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Sum bytes over (possibly tuple) shapes in a result type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    total_bytes: float
+    by_kind: dict
+    n_ops: int
+
+
+_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+
+
+def _split_computations(text: str) -> dict:
+    """name -> list of op lines."""
+    comps: dict = {}
+    cur = None
+    for line in text.splitlines():
+        s = line.strip()
+        m = _HDR_RE.match(s)
+        if m:
+            cur = m.group(1)
+            comps.setdefault(cur, [])
+        elif cur is not None and s and not s.startswith("}"):
+            comps[cur].append(s)
+    return comps
+
+
+def _while_trip_counts(text: str, comps: dict) -> dict:
+    """body computation name -> trip count (best-effort)."""
+    out: dict = {}
+    for m in re.finditer(
+            r"while\([^)]*\)[^\n]*condition=%?([\w\.\-]+)[^\n]*body=%?([\w\.\-]+)",
+            text):
+        cond, body = m.group(1), m.group(2)
+        trip = 1
+        for line in comps.get(cond, []):
+            for c in re.findall(r"constant\((\d+)\)", line):
+                trip = max(trip, int(c))
+        out[body] = max(out.get(body, 1), trip)
+    return out
+
+
+_OP_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|[a-z0-9]+\[[\d,]*\](?:\{[\d,]*\})?))\s+"
+    r"([a-z0-9\-]+)\(")
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    comps = _split_computations(hlo_text)
+    trips = _while_trip_counts(hlo_text, comps)
+    by_kind: dict = {k: 0.0 for k in COLLECTIVE_OPS}
+    n_ops = 0
+    for name, lines in comps.items():
+        mult = trips.get(name, 1)
+        for line in lines:
+            m = _OP_RE.search(line)
+            if not m:
+                continue
+            shape_str, opcode = m.group(1), m.group(2)
+            for kind in COLLECTIVE_OPS:
+                # count the op once (at -start for async pairs)
+                if opcode == kind or opcode == kind + "-start":
+                    by_kind[kind] += _shape_bytes(shape_str) * mult
+                    n_ops += 1
+                    break
+    total = float(sum(by_kind.values()))
+    return CollectiveStats(total_bytes=total, by_kind=by_kind, n_ops=n_ops)

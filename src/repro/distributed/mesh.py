@@ -1,0 +1,100 @@
+"""Mesh construction and logical sharding rules.
+
+The production mesh is (16, 16) = 256 chips per pod with axes ("data",
+"model"), or (2, 16, 16) with axes ("pod", "data", "model") for the
+multi-pod dry-run.  Parameters and activations are annotated with *logical*
+dimension names which are resolved to mesh axes here, so the same model code
+lowers on 1-device CPU (all rules resolve to None), a single pod, or the
+multi-pod mesh.
+
+Logical names:
+  batch   — activation batch dim           -> ("pod", "data")
+  fsdp    — weight dim sharded ZeRO-3 style -> ("data", "pod")
+  tp      — tensor-parallel weight/act dim -> ("model",)
+  sp      — sequence dim of saved activations (sequence parallelism) -> ("model",)
+  expert  — MoE expert dim (expert parallelism) -> ("model",)
+  (None)  — replicated
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """The assigned production mesh: 16x16 single pod, 2x16x16 multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh() -> Mesh:
+    """Whatever devices exist locally, as a 1-D 'data' mesh (smoke tests)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisEnv:
+    """Resolved mesh-axis assignments for the logical names."""
+    batch: tuple
+    fsdp: tuple
+    tp: tuple
+    sp: tuple
+    expert: tuple
+
+    @staticmethod
+    def from_mesh(mesh: Mesh) -> "AxisEnv":
+        names = set(mesh.axis_names)
+        has_pod = "pod" in names
+        has_model = "model" in names and mesh.shape.get("model", 1) > 1
+        data = ("data",) if "data" in names else ()
+        pod = ("pod",) if has_pod else ()
+        model = ("model",) if "model" in names else ()
+        return AxisEnv(
+            batch=pod + data,
+            fsdp=data + pod,
+            tp=model,
+            sp=model,
+            expert=model,
+        )
+
+    def resolve(self, logical: Sequence[Optional[str]]) -> P:
+        """Map a tuple of logical dim names to a PartitionSpec."""
+        out = []
+        for name in logical:
+            if name is None:
+                out.append(None)
+                continue
+            axes = getattr(self, name)
+            if len(axes) == 0:
+                out.append(None)
+            elif len(axes) == 1:
+                out.append(axes[0])
+            else:
+                out.append(tuple(axes))
+        return P(*out)
+
+
+def axis_size(mesh: Mesh, names: tuple) -> int:
+    n = 1
+    for name in names:
+        n *= mesh.shape.get(name, 1)
+    return n
+
+
+def batch_spec(env: AxisEnv, mesh: Mesh, global_batch: int) -> Optional[str]:
+    """'batch' if the batch dim divides the batch mesh axes, else None.
+
+    long_500k has global_batch=1: replicate rather than pad 1 -> 32.
+    """
+    ways = axis_size(mesh, env.batch)
+    return "batch" if global_batch % ways == 0 and global_batch >= ways else None
+
+
+def shard_leaf(mesh: Mesh, x, spec: P):
+    return jax.device_put(x, NamedSharding(mesh, spec))

@@ -1,0 +1,96 @@
+"""Fused CNF-join Pallas TPU kernel.
+
+Evaluates a featurized decomposition (CNF with per-clause tied thresholds,
+Lemma D.1 form) over an (L_TILE x R_TILE) block of the cross product in one
+pass:
+
+  * vector features (semantic / word-overlap):  dist = 0.5 - 0.5 * (A @ B^T)
+    — an MXU matmul over embeddings staged in VMEM (augmented [e, m, 1] /
+    [e, 1, m] rows encode missing values, see repro.core.featurize);
+  * scalar features (arithmetic / date):        dist = |x - y|  (VPU);
+  * per clause: min over member features, compare against the clause
+    threshold; AND across clauses;
+  * output: uint32 bitmask packed along the R dimension (32 pairs/word) —
+    n^2/8 bytes of HBM traffic instead of F * n^2 * 4 for the unfused
+    XLA lowering that materializes every feature's distance plane.
+
+The clause structure and thresholds are *compile-time constants* (closed
+over), so the kernel body unrolls into a static sequence of matmuls +
+vector ops — no interpreter-visible control flow.
+
+VMEM budget per grid step (TL=256, TR=512, D=128, F=6):
+  emb_l  F*TL*D*4  = 768 KiB     emb_r  F*TR*D*4 = 1.5 MiB
+  planes 2*TL*TR*4 = 1   MiB     out    TL*TR/8  = 16 KiB      < 4 MiB total.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# feature kind tags used in the static clause structure
+VEC, SCAL = 0, 1
+
+
+def _cnf_kernel(emb_l_ref, emb_r_ref, scal_l_ref, scal_r_ref, out_ref, *,
+                clauses, thetas, tl, tr):
+    """clauses: tuple of clauses, each a tuple of (kind, idx); thetas: floats."""
+    ok = None
+    for ci, members in enumerate(clauses):
+        dmin = None
+        for kind, fi in members:
+            if kind == VEC:
+                a = emb_l_ref[fi, :, :]                       # (TL, D)
+                b = emb_r_ref[fi, :, :]                       # (TR, D)
+                dot = jax.lax.dot_general(
+                    a, b, (((1,), (1,)), ((), ())),
+                    preferred_element_type=jnp.float32)       # (TL, TR) MXU
+                d = jnp.clip(0.5 - 0.5 * dot, 0.0, 1.0)
+            else:
+                x = scal_l_ref[fi, :]                         # (TL,)
+                y = scal_r_ref[fi, :]                         # (TR,)
+                d = jnp.clip(jnp.abs(x[:, None] - y[None, :]), 0.0, 1.0)
+            dmin = d if dmin is None else jnp.minimum(dmin, d)
+        pas = dmin <= thetas[ci]
+        ok = pas if ok is None else jnp.logical_and(ok, pas)
+    # pack 32 R-neighbours per uint32 word
+    okw = ok.reshape(tl, tr // 32, 32).astype(jnp.uint32)
+    weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
+    out_ref[:, :] = jnp.sum(okw * weights[None, None, :], axis=-1,
+                            dtype=jnp.uint32)
+
+
+def cnf_join_block(emb_l, emb_r, scal_l, scal_r, clauses, thetas, *,
+                   tl: int = 256, tr: int = 512, interpret: bool = False):
+    """Launch the fused kernel over the full (n_l x n_r) plane.
+
+    emb_l: (F_v, n_l, D) f32   emb_r: (F_v, n_r, D) f32
+    scal_l: (F_s, n_l) f32     scal_r: (F_s, n_r) f32
+    clauses: static structure (tuple of tuples of (kind, idx))
+    thetas: tuple of python floats (compile-time constants)
+    Returns packed uint32 mask (n_l, n_r // 32).
+    """
+    fv, n_l, d = emb_l.shape
+    n_r = emb_r.shape[1]
+    assert n_l % tl == 0 and n_r % tr == 0 and tr % 32 == 0
+    grid = (n_l // tl, n_r // tr)
+    kernel = functools.partial(_cnf_kernel, clauses=tuple(clauses),
+                               thetas=tuple(float(t) for t in thetas),
+                               tl=tl, tr=tr)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((fv, tl, d), lambda i, j: (0, i, 0)),
+            pl.BlockSpec((fv, tr, d), lambda i, j: (0, j, 0)),
+            pl.BlockSpec((max(scal_l.shape[0], 1), tl), lambda i, j: (0, i)),
+            pl.BlockSpec((max(scal_r.shape[0], 1), tr), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((tl, tr // 32), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n_l, n_r // 32), jnp.uint32),
+        interpret=interpret,
+    )(emb_l, emb_r, scal_l, scal_r)

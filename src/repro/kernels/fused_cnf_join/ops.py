@@ -1,0 +1,97 @@
+"""jit'd wrapper + corpus driver for the fused CNF-join kernel.
+
+``pack_features`` converts a list of core ``FeatureData`` (+ scaffold clause
+structure) into the kernel's array layout, padding record counts to tile
+multiples and embedding dims to a lane multiple (128).  ``evaluate_corpus``
+is the engine behind ``FDJConfig(engine="pallas")``: it runs the kernel
+block-wise (interpret mode on CPU, compiled on TPU) and returns candidate
+pair indices.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.fused_cnf_join import ref
+from repro.kernels.fused_cnf_join.kernel import SCAL, VEC, cnf_join_block
+
+
+def _pad_to(x: np.ndarray, n: int, axis: int, value: float) -> np.ndarray:
+    pad = n - x.shape[axis]
+    if pad <= 0:
+        return x
+    width = [(0, 0)] * x.ndim
+    width[axis] = (0, pad)
+    return np.pad(x, width, constant_values=value)
+
+
+def pack_features(feats: Sequence, clauses: Sequence, *, tl: int, tr: int,
+                  lane: int = 128):
+    """Returns (emb_l, emb_r, scal_l, scal_r, kclauses, n_l, n_r).
+
+    Padded L rows are marked missing (distance 1 to everything) so they can
+    never produce spurious matches; padded R likewise.
+    """
+    used = sorted({f for c in clauses for f in c})
+    vec_ids = [f for f in used if feats[f].kind == "embed"]
+    scal_ids = [f for f in used if feats[f].kind == "scalar"]
+    vmap = {f: i for i, f in enumerate(vec_ids)}
+    smap = {f: i for i, f in enumerate(scal_ids)}
+    kclauses = tuple(
+        tuple((VEC, vmap[f]) if feats[f].kind == "embed" else (SCAL, smap[f])
+              for f in c)
+        for c in clauses)
+
+    n_l = feats[used[0]].data_l.shape[0]
+    n_r = feats[used[0]].data_r.shape[0]
+    pl_n = -(-n_l // tl) * tl
+    pr_n = -(-n_r // tr) * tr
+    d_max = max([feats[f].data_l.shape[1] for f in vec_ids], default=lane)
+    d_pad = -(-d_max // lane) * lane
+
+    if vec_ids:
+        emb_l = np.zeros((len(vec_ids), pl_n, d_pad), np.float32)
+        emb_r = np.zeros((len(vec_ids), pr_n, d_pad), np.float32)
+        for f in vec_ids:
+            dl, dr = feats[f].data_l, feats[f].data_r
+            emb_l[vmap[f], : n_l, : dl.shape[1]] = dl
+            emb_r[vmap[f], : n_r, : dr.shape[1]] = dr
+            # padded rows: missing markers [.., m=-2, 1] / [.., 1, m=-2]
+            emb_l[vmap[f], n_l:, dl.shape[1] - 2] = -2.0
+            emb_l[vmap[f], n_l:, dl.shape[1] - 1] = 1.0
+            emb_r[vmap[f], n_r:, dr.shape[1] - 2] = 1.0
+            emb_r[vmap[f], n_r:, dr.shape[1] - 1] = -2.0
+    else:
+        emb_l = np.zeros((1, pl_n, d_pad), np.float32)
+        emb_r = np.zeros((1, pr_n, d_pad), np.float32)
+
+    if scal_ids:
+        scal_l = np.stack([_pad_to(feats[f].data_l.astype(np.float32), pl_n, 0, 1e9)
+                           for f in scal_ids])
+        scal_r = np.stack([_pad_to(feats[f].data_r.astype(np.float32), pr_n, 0, -1e9)
+                           for f in scal_ids])
+    else:
+        scal_l = np.full((1, pl_n), 1e9, np.float32)
+        scal_r = np.full((1, pr_n), -1e9, np.float32)
+    return emb_l, emb_r, scal_l, scal_r, kclauses, n_l, n_r
+
+
+def evaluate_corpus(feats: Sequence, clauses: Sequence, thetas, block: int = 2048,
+                    *, tl: int = 256, tr: int = 512, interpret=None) -> list:
+    """Full-corpus CNF evaluation through the kernel; returns [(i, j), ...]."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    emb_l, emb_r, scal_l, scal_r, kclauses, n_l, n_r = pack_features(
+        feats, clauses, tl=tl, tr=tr)
+    packed = cnf_join_block(
+        jnp.asarray(emb_l), jnp.asarray(emb_r), jnp.asarray(scal_l),
+        jnp.asarray(scal_r), kclauses, tuple(float(t) for t in thetas),
+        tl=tl, tr=tr, interpret=interpret)
+    ok = ref.unpack_mask(np.asarray(packed), emb_r.shape[1])[:n_l, :n_r]
+    ii, jj = np.nonzero(ok)
+    return list(zip(ii.tolist(), jj.tolist()))

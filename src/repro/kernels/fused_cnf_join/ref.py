@@ -1,0 +1,47 @@
+"""Pure-jnp oracle for the fused CNF-join kernel (identical math, unfused).
+
+This is also the *baseline* lowering used in the kernel benchmark: every
+feature's full (n_l, n_r) distance plane is materialized, then min-reduced
+and compared — what a straightforward XLA program would do.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fused_cnf_join.kernel import SCAL, VEC
+
+
+def cnf_join_ref(emb_l, emb_r, scal_l, scal_r, clauses, thetas) -> jnp.ndarray:
+    """Returns the boolean match matrix (n_l, n_r)."""
+    ok = None
+    for ci, members in enumerate(clauses):
+        dmin = None
+        for kind, fi in members:
+            if kind == VEC:
+                dot = jnp.einsum("ld,rd->lr", emb_l[fi], emb_r[fi])
+                d = jnp.clip(0.5 - 0.5 * dot, 0.0, 1.0)
+            else:
+                d = jnp.clip(jnp.abs(scal_l[fi][:, None] - scal_r[fi][None, :]),
+                             0.0, 1.0)
+            dmin = d if dmin is None else jnp.minimum(dmin, d)
+        pas = dmin <= thetas[ci]
+        ok = pas if ok is None else ok & pas
+    return ok
+
+
+def pack_mask(ok: jnp.ndarray) -> jnp.ndarray:
+    """Pack a boolean (n_l, n_r) matrix to uint32 words along R."""
+    n_l, n_r = ok.shape
+    okw = ok.reshape(n_l, n_r // 32, 32).astype(jnp.uint32)
+    weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
+    return jnp.sum(okw * weights[None, None, :], axis=-1, dtype=jnp.uint32)
+
+
+def unpack_mask(packed, n_r: int):
+    """uint32 (n_l, n_r//32) -> bool (n_l, n_r)."""
+    import numpy as np
+    p = np.asarray(packed)
+    bits = ((p[:, :, None] >> np.arange(32, dtype=np.uint32)) & 1).astype(bool)
+    return bits.reshape(p.shape[0], -1)[:, :n_r]

@@ -1,0 +1,73 @@
+"""Threshold-sweep Pallas kernel.
+
+Evaluates G candidate threshold vectors against k labeled sample rows of
+clause distances in one pass — the inner loop of Eq 1 / Eq 4 (scaffold cost
+estimation and final threshold selection).  For each grid row g:
+
+    pos[g] = sum_i labels_i * AND_c (cd[i,c] <= theta[g,c])
+    sel[g] = sum_i           AND_c (cd[i,c] <= theta[g,c])
+
+The (TG x TK) pass/fail plane is built on the VPU from C unrolled broadcast
+compares; the label reduction is a (TG,TK)@(TK,) matvec on the MXU.  Output
+accumulates across the k grid dimension (out block revisited; initialized at
+program_id(1)==0).
+
+Output layout: (G, 128) f32, col 0 = positive count, col 1 = selected count
+(lane-padded for TPU tiling).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sweep_kernel(cd_ref, lab_ref, th_ref, out_ref, *, n_clauses, tg, tk):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        out_ref[:, :] = jnp.zeros_like(out_ref)
+
+    ok = None
+    for c in range(n_clauses):                       # static unroll
+        d = cd_ref[:, c]                             # (TK,)
+        t = th_ref[:, c]                             # (TG,)
+        pas = d[None, :] <= t[:, None]               # (TG, TK)
+        ok = pas if ok is None else jnp.logical_and(ok, pas)
+    okf = ok.astype(jnp.float32)
+    lab = lab_ref[:]                                 # (TK,)
+    pos = jax.lax.dot_general(okf, lab[:, None], (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)[:, 0]
+    sel = jnp.sum(okf, axis=1)
+    acc = out_ref[:, :]
+    acc = acc.at[:, 0].add(pos)
+    acc = acc.at[:, 1].add(sel)
+    out_ref[:, :] = acc
+
+
+def threshold_sweep(cd, labels, thetas, *, tg: int = 256, tk: int = 512,
+                    interpret: bool = False):
+    """cd: (k, C) f32; labels: (k,) f32 in {0,1}; thetas: (G, C) f32.
+
+    k and G must be tile multiples (pad labels with 0 and cd rows with +inf;
+    pad thetas rows with -inf so padded rows count nothing).
+    Returns (G, 128) f32; [:, 0] = positives, [:, 1] = selected.
+    """
+    k, c = cd.shape
+    g = thetas.shape[0]
+    assert k % tk == 0 and g % tg == 0
+    kernel = functools.partial(_sweep_kernel, n_clauses=c, tg=tg, tk=tk)
+    return pl.pallas_call(
+        kernel,
+        grid=(g // tg, k // tk),
+        in_specs=[
+            pl.BlockSpec((tk, c), lambda i, j: (j, 0)),
+            pl.BlockSpec((tk,), lambda i, j: (j,)),
+            pl.BlockSpec((tg, c), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tg, 128), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, 128), jnp.float32),
+        interpret=interpret,
+    )(cd, labels, thetas)

@@ -1,0 +1,49 @@
+"""jit'd wrapper for the threshold-sweep kernel + grid helpers."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.threshold_sweep.kernel import threshold_sweep
+
+
+def _pad_rows(x, n, value):
+    pad = n - x.shape[0]
+    if pad <= 0:
+        return x
+    width = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
+    return np.pad(x, width, constant_values=value)
+
+
+def sweep(cd: np.ndarray, labels: np.ndarray, thetas: np.ndarray, *,
+          tg: int = 256, tk: int = 512, interpret=None):
+    """Padded, jit'd sweep. Returns (pos_counts, sel_counts) as (G,) arrays."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    k, c = cd.shape
+    g = thetas.shape[0]
+    kp = -(-k // tk) * tk
+    gp = -(-g // tg) * tg
+    cd_p = _pad_rows(cd.astype(np.float32), kp, np.inf)
+    lab_p = _pad_rows(labels.astype(np.float32), kp, 0.0)
+    th_p = _pad_rows(thetas.astype(np.float32), gp, -np.inf)
+    out = threshold_sweep(jnp.asarray(cd_p), jnp.asarray(lab_p),
+                          jnp.asarray(th_p), tg=tg, tk=tk, interpret=interpret)
+    out = np.asarray(out)[:g]
+    return out[:, 0], out[:, 1]
+
+
+def candidate_grid(cd_pos: np.ndarray, max_per_dim: int = 24) -> np.ndarray:
+    """Cartesian grid of per-clause positive-distance quantiles."""
+    c = cd_pos.shape[1]
+    axes = []
+    for j in range(c):
+        vals = np.unique(cd_pos[:, j])
+        if len(vals) > max_per_dim:
+            qs = np.linspace(0, 1, max_per_dim)
+            vals = np.unique(np.quantile(vals, qs, method="nearest"))
+        axes.append(vals)
+    mesh = np.meshgrid(*axes, indexing="ij")
+    return np.stack([m.ravel() for m in mesh], axis=1).astype(np.float32)

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the threshold-sweep kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def threshold_sweep_ref(cd, labels, thetas):
+    """cd: (k, C); labels: (k,); thetas: (G, C) -> (G, 2) [pos, sel]."""
+    ok = jnp.all(cd[None, :, :] <= thetas[:, None, :], axis=-1)  # (G, k)
+    pos = ok.astype(jnp.float32) @ labels.astype(jnp.float32)
+    sel = jnp.sum(ok, axis=1).astype(jnp.float32)
+    return jnp.stack([pos, sel], axis=1)

@@ -1,0 +1,206 @@
+"""Dry-run cell construction: (architecture x input shape x mesh) -> a jitted
+step function plus abstract (ShapeDtypeStruct) inputs with shardings.
+
+``input_specs(arch, shape)`` follows the assignment contract: weak-type
+correct ShapeDtypeStruct stand-ins for every model input, no allocation.
+Modality frontends are stubs — the VLM cell's image memory arrives as
+precomputed patch embeddings (B, M, F).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.common.config import FFNKind, ModelConfig, SHAPES, ShapeConfig, TrainConfig
+from repro.configs import LONG_CONTEXT_ARCHS, get_config
+from repro.distributed.mesh import AxisEnv, axis_size, batch_spec
+from repro.models import steps, transformer
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    fn: object                   # jitted, ready to .lower(*abstract_args)
+    abstract_args: tuple
+    cfg: ModelConfig
+    note: str = ""
+
+
+def cell_supported(arch: str, shape: str) -> tuple:
+    """(supported, reason)."""
+    if shape == "long_500k" and arch not in LONG_CONTEXT_ARCHS:
+        return False, "long_500k requires sub-quadratic mixing (skip: full attention)"
+    return True, ""
+
+
+def tp_pad_config(cfg: ModelConfig, tp: int) -> ModelConfig:
+    """Function-preserving head padding for tensor parallelism.
+
+    Q heads are zero-padded to a multiple of tp (padded heads have null
+    output projections ⇒ identical function); KV heads are value-duplicated
+    to a multiple of tp (standard KV replication when tp > n_kv) with the
+    GQA group mapping preserved.  Archs without attention blocks are
+    untouched (their TP lands on head_dim/inner dims instead).
+    """
+    if tp <= 1:
+        return cfg
+    kinds = set(cfg.pattern)
+    if not ({"attn", "cross_attn", "mla"} & kinds):
+        return cfg
+    nh, nkv = cfg.num_heads, cfg.num_kv_heads
+    nh2 = -(-nh // tp) * tp
+    if "mla" in kinds:
+        nkv2 = nkv if nh2 == nh else nh2       # MLA: latent cache, per-q heads
+    else:
+        nkv2 = nkv if nkv % tp == 0 else -(-nkv // tp) * tp
+        if nh2 % nkv2:
+            nkv2 = nh2                          # degenerate to MHA padding
+    if nh2 == nh and nkv2 == nkv:
+        return cfg
+    return dataclasses.replace(cfg, num_heads=nh2, num_kv_heads=nkv2)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _sharded_sds(mesh, shape, dtype, spec):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def _bspec(env: AxisEnv, mesh, b: int):
+    name = batch_spec(env, mesh, b)
+    return env.resolve((name,))[0] if name else None
+
+
+def input_specs(arch: str, shape: str, mesh) -> dict:
+    """Abstract model inputs for the cell (assignment deliverable)."""
+    cfg = get_config(arch)
+    sc = SHAPES[shape]
+    env = AxisEnv.from_mesh(mesh)
+    b = sc.global_batch
+    bs = _bspec(env, mesh, b)
+    sp = "model" if sc.seq_len % max(axis_size(mesh, env.sp), 1) == 0 else None
+    out = {}
+    if sc.kind == "train":
+        out["tokens"] = _sharded_sds(mesh, (b, sc.seq_len), jnp.int32, P(bs, sp))
+        out["labels"] = _sharded_sds(mesh, (b, sc.seq_len), jnp.int32, P(bs, sp))
+    elif sc.kind == "prefill":
+        out["tokens"] = _sharded_sds(mesh, (b, sc.seq_len), jnp.int32, P(bs, sp))
+    else:  # decode
+        out["tokens"] = _sharded_sds(mesh, (b, 1), jnp.int32, P(bs, None))
+        out["positions"] = _sharded_sds(mesh, (b, 1), jnp.int32, P(bs, None))
+    if cfg.cross_attn_every:
+        out["memory"] = _sharded_sds(
+            mesh, (b, cfg.cross_attn_memory_len, cfg.frontend_embed_dim),
+            jnp.float32, P(bs, None, None))
+    return out
+
+
+def _abstract_opt(aparams):
+    return {
+        "m": jax.tree.map(lambda a: _sds(a.shape, jnp.float32), aparams),
+        "v": jax.tree.map(lambda a: _sds(a.shape, jnp.float32), aparams),
+        "step": _sds((), jnp.int32),
+    }
+
+
+def _opt_specs(pspecs):
+    return {"m": pspecs, "v": pspecs, "step": P()}
+
+
+def build_cell(arch: str, shape: str, mesh, *,
+               remat_policy: Optional[str] = None,
+               use_ep: Optional[bool] = None,
+               mla_absorb: bool = True,
+               layers_override: Optional[int] = None,
+               scan_override: Optional[bool] = None,
+               param_cast: Optional[str] = None,
+               cfg_override: Optional[ModelConfig] = None) -> Cell:
+    ok, why = cell_supported(arch, shape)
+    if not ok:
+        raise ValueError(why)
+    cfg = cfg_override if cfg_override is not None else get_config(arch)
+    if remat_policy is not None:
+        cfg = dataclasses.replace(cfg, remat_policy=remat_policy)
+    if layers_override is not None:
+        cfg = dataclasses.replace(cfg, num_layers=layers_override)
+    if scan_override is not None:
+        cfg = dataclasses.replace(cfg, scan_layers=scan_override)
+    if param_cast is not None:
+        cfg = dataclasses.replace(cfg, param_cast=param_cast)
+    sc = SHAPES[shape]
+    env = AxisEnv.from_mesh(mesh)
+    cfg = tp_pad_config(cfg, axis_size(mesh, env.tp))
+    is_moe = cfg.ffn_kind == FFNKind.MOE.value
+    if use_ep is None:
+        use_ep = is_moe
+    pspecs = transformer.param_specs(cfg, env)
+    aparams = transformer.abstract_params(cfg)
+    aparams = jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype,
+                                          sharding=NamedSharding(mesh, s)),
+        aparams, pspecs)
+    ins = input_specs(arch, shape, mesh)
+    b = sc.global_batch
+    bs = _bspec(env, mesh, b)
+
+    def sp_constraint(x):
+        if x.ndim == 3 and x.shape[1] % max(axis_size(mesh, env.sp), 1) == 0 \
+                and x.shape[1] > 1:
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(bs, "model", None)))
+        return x
+
+    def ns_tree(tree):
+        return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    if sc.kind == "train":
+        tcfg = TrainConfig()
+        train_step = steps.make_train_step(
+            cfg, tcfg, use_ep=use_ep, mesh=mesh if use_ep else None,
+            sp_constraint=sp_constraint)
+        aopt = _abstract_opt(aparams)
+        fn = jax.jit(train_step,
+                     in_shardings=(ns_tree(pspecs), ns_tree(_opt_specs(pspecs)),
+                                   None),
+                     donate_argnums=(0, 1))
+        batch = {"tokens": ins["tokens"], "labels": ins["labels"]}
+        if "memory" in ins:
+            batch["memory"] = ins["memory"]
+        return Cell(arch, shape, fn, (aparams, aopt, batch), cfg)
+
+    capacity = sc.seq_len
+    if sc.kind == "prefill":
+        prefill = steps.make_prefill_step(cfg, capacity, use_ep=use_ep,
+                                          mesh=mesh if use_ep else None,
+                                          sp_constraint=sp_constraint)
+        if "memory" in ins:
+            fn = jax.jit(lambda p, t, m: prefill(p, t, m))
+            args = (aparams, ins["tokens"], ins["memory"])
+        else:
+            fn = jax.jit(lambda p, t: prefill(p, t))
+            args = (aparams, ins["tokens"])
+        return Cell(arch, shape, fn, args, cfg)
+
+    # decode
+    astate = transformer.abstract_state(cfg, b, capacity)
+    sspecs = transformer.state_specs(cfg, env, b, capacity,
+                                     batch_logical=batch_spec(env, mesh, b))
+    astate = jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype,
+                                          sharding=NamedSharding(mesh, s)),
+        astate, sspecs)
+    decode = steps.make_decode_step(cfg, use_ep=use_ep,
+                                    mesh=mesh if use_ep else None)
+    fn = jax.jit(decode, donate_argnums=(1,))
+    return Cell(arch, shape, fn, (aparams, astate, ins["tokens"],
+                                  ins["positions"]), cfg)

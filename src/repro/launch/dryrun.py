@@ -1,0 +1,128 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + \
+    " --xla_force_host_platform_device_count=512"
+# ^ MUST precede any other import (jax locks device count on first init).
+
+"""Multi-pod dry-run: lower + compile every (architecture x shape) cell on
+the production meshes and record memory / cost / collective analyses.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch starcoder2-3b \
+      --shape train_4k --mesh single            # one cell
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh multi    # sweep
+
+Artifacts: benchmarks/results/dryrun/<mesh>/<arch>__<shape>.json, consumed
+by the roofline builder (benchmarks/roofline.py) and EXPERIMENTS.md.
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.common.config import SHAPES
+from repro.configs import ARCH_IDS
+from repro.distributed.hlo_analysis import collective_bytes
+from repro.launch.cells import build_cell, cell_supported
+from repro.launch.mesh import make_production_mesh
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "benchmarks", "results", "dryrun")
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, *, out_dir: str = RESULTS,
+             verbose: bool = True, **cell_kw) -> dict:
+    ok, why = cell_supported(arch, shape)
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_kind}
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        _save(rec, out_dir, mesh_kind, arch, shape)
+        return rec
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+        cell = build_cell(arch, shape, mesh, **cell_kw)
+        lowered = cell.fn.lower(*cell.abstract_args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        coll = collective_bytes(hlo)
+        rec.update(
+            status="ok",
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            flops_per_device=cost.get("flops", 0.0),
+            bytes_per_device=cost.get("bytes accessed", 0.0),
+            collective_bytes_per_device=coll.total_bytes,
+            collective_by_kind=coll.by_kind,
+            collective_ops=coll.n_ops,
+            memory={
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+            },
+            hlo_bytes=len(hlo),
+        )
+        if verbose:
+            m = rec["memory"]
+            print(f"[{mesh_kind}] {arch} x {shape}: OK "
+                  f"flops/dev={rec['flops_per_device']:.3e} "
+                  f"bytes/dev={rec['bytes_per_device']:.3e} "
+                  f"coll/dev={rec['collective_bytes_per_device']:.3e} "
+                  f"temp={_gb(m['temp_bytes'])} args={_gb(m['argument_bytes'])} "
+                  f"(lower {rec['lower_s']}s compile {rec['compile_s']}s)")
+    except Exception as e:
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc())
+        if verbose:
+            print(f"[{mesh_kind}] {arch} x {shape}: ERROR {rec['error']}")
+    _save(rec, out_dir, mesh_kind, arch, shape)
+    return rec
+
+
+def _gb(x):
+    return f"{x/2**30:.2f}GiB" if x is not None else "?"
+
+
+def _save(rec, out_dir, mesh_kind, arch, shape):
+    d = os.path.join(out_dir, mesh_kind)
+    os.makedirs(d, exist_ok=True)
+    rec = dict(rec)
+    rec.pop("traceback", None)
+    with open(os.path.join(d, f"{arch}__{shape}.json"), "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="")
+    ap.add_argument("--shape", default="")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--remat-policy", default=None)
+    ap.add_argument("--param-cast", default=None)
+    args = ap.parse_args()
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    archs = ARCH_IDS if (args.all or not args.arch) else args.arch.split(",")
+    shapes = list(SHAPES) if (args.all or not args.shape) else args.shape.split(",")
+    n_ok = n_skip = n_err = 0
+    for mesh_kind in meshes:
+        for arch in archs:
+            for shape in shapes:
+                rec = run_cell(arch, shape, mesh_kind,
+                               remat_policy=args.remat_policy,
+                               param_cast=args.param_cast)
+                n_ok += rec["status"] == "ok"
+                n_skip += rec["status"] == "skipped"
+                n_err += rec["status"] == "error"
+    print(f"dryrun done: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+    raise SystemExit(1 if n_err else 0)
+
+
+if __name__ == "__main__":
+    main()

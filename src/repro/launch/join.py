@@ -1,0 +1,106 @@
+"""FDJ join launcher — the paper's end-to-end pipeline as a CLI.
+
+  PYTHONPATH=src python -m repro.launch.join --dataset police_records \
+      --target 0.9 --delta 0.1 [--engine pallas]
+
+Also exposes the *distributed join step* (``build_join_cell``): the fused
+CNF evaluation over an L x R block plane lowered on the production mesh —
+L rows sharded over (pod, data), R rows over model — which is the
+paper-technique dry-run/roofline cell referenced in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from repro.core.costs import naive_join_cost
+from repro.core.join import FDJConfig, fdj_join
+from repro.data import synth
+from repro.data.simulated_llm import SimulatedExtractor, SimulatedProposer
+
+
+def run_join(dataset: str = "police_records", target: float = 0.9,
+             delta: float = 0.1, precision_target: float = 1.0,
+             engine: str = "numpy", size: float = 1.0, seed: int = 0) -> dict:
+    gens = {
+        "police_records": lambda: synth.police_records(
+            n_incidents=int(300 * size), reports_per_incident=3, seed=seed),
+        "citations": lambda: synth.citations(n_docs=int(900 * size), seed=seed),
+        "movies": lambda: synth.movies_pages(n_movies=int(400 * size), seed=seed),
+        "products": lambda: synth.products(n_products=int(700 * size), seed=seed),
+        "categorize": lambda: synth.categorize(n_items=int(2000 * size), seed=seed),
+        "biodex": lambda: synth.biodex(n_notes=int(1500 * size), seed=seed),
+    }
+    ds = gens[dataset]()
+    oracle = ds.make_oracle()
+    cfg = FDJConfig(recall_target=target, delta=delta, engine=engine,
+                    precision_target=precision_target, seed=seed)
+    res = fdj_join(ds, oracle, SimulatedProposer(ds), SimulatedExtractor(ds, seed=seed), cfg)
+    naive = naive_join_cost(ds.texts_l, ds.texts_r)
+    return {
+        "dataset": ds.name, "n_l": ds.n_l, "n_r": ds.n_r,
+        "recall": round(res.recall, 4), "precision": round(res.precision, 4),
+        "recall_target": target, "t_prime": round(res.t_prime, 4),
+        "met_target": res.met_target,
+        "clauses": res.scaffold.clauses,
+        "featurizations": [s.key for s in res.specs],
+        "candidates": res.candidate_count,
+        "cost_ratio": round(res.cost.total / naive, 4),
+        "breakdown": {k: round(v / naive, 4) for k, v in res.cost.breakdown().items()},
+    }
+
+
+# ---------------------------------------------------------------------------
+# distributed join step (dry-run cell for the paper's technique)
+# ---------------------------------------------------------------------------
+
+def build_join_cell(mesh, *, n_l: int = 262144, n_r: int = 262144,
+                    f_vec: int = 4, d: int = 128, n_clauses: int = 3):
+    """jitted CNF-join step + abstract inputs, sharded over the mesh."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.distributed.mesh import AxisEnv
+    from repro.kernels.fused_cnf_join import ref as cref
+    from repro.kernels.fused_cnf_join.kernel import VEC
+
+    env = AxisEnv.from_mesh(mesh)
+    rows_l = env.resolve(("batch",))[0]          # (pod, data)
+    rows_r = "model"
+    clauses = tuple(((VEC, i),) for i in range(n_clauses))
+    thetas = tuple(0.4 for _ in range(n_clauses))
+
+    def join_step(emb_l, emb_r):
+        ok = cref.cnf_join_ref(emb_l, emb_r, None, None, clauses, thetas)
+        return cref.pack_mask(ok)
+
+    sds = jax.ShapeDtypeStruct
+    a_l = sds((f_vec, n_l, d), jnp.float32,
+              sharding=NamedSharding(mesh, P(None, rows_l, None)))
+    a_r = sds((f_vec, n_r, d), jnp.float32,
+              sharding=NamedSharding(mesh, P(None, rows_r, None)))
+    out_sh = NamedSharding(mesh, P(rows_l, rows_r))
+    fn = jax.jit(join_step, out_shardings=out_sh)
+    return fn, (a_l, a_r)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="police_records")
+    ap.add_argument("--target", type=float, default=0.9)
+    ap.add_argument("--delta", type=float, default=0.1)
+    ap.add_argument("--precision-target", type=float, default=1.0)
+    ap.add_argument("--engine", default="numpy", choices=["numpy", "pallas"])
+    ap.add_argument("--size", type=float, default=1.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    out = run_join(args.dataset, args.target, args.delta,
+                   args.precision_target, args.engine, args.size, args.seed)
+    print(json.dumps(out, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""Production mesh entry point (assignment-mandated signature).
+
+``make_production_mesh`` is a function (not a module-level constant) so that
+importing this module never touches jax device state — required because the
+dry-run must set ``XLA_FLAGS`` before any jax initialization.
+"""
+
+from __future__ import annotations
+
+from repro.distributed.mesh import (AxisEnv, axis_size, batch_spec,
+                                    make_host_mesh, make_production_mesh)
+
+__all__ = ["make_production_mesh", "make_host_mesh", "AxisEnv", "axis_size",
+           "batch_spec"]

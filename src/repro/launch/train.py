@@ -1,0 +1,110 @@
+"""Training launcher with checkpoint/restart fault tolerance.
+
+  PYTHONPATH=src python -m repro.launch.train --arch mistral-nemo-12b --smoke \
+      --steps 50 --checkpoint-dir /tmp/ckpt
+
+Restarts resume from the latest checkpoint automatically; ``--fail-at N``
+injects a crash at step N to exercise the restart path (examples/ and tests/
+use it).  On the CPU container the mesh is the host mesh; on real hardware
+pass --mesh single|multi for the production meshes.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.common.config import TrainConfig
+from repro.configs import get_config, get_smoke
+from repro.data.pipeline import PackedLMConfig, PackedLMDataset, PrefetchLoader
+from repro.distributed.mesh import AxisEnv, make_host_mesh, make_production_mesh
+from repro.models import steps, transformer
+from repro.optim import adamw
+
+
+class SimulatedFailure(RuntimeError):
+    pass
+
+
+def corpus_texts():
+    from repro.data import synth
+    ds = synth.police_records(n_incidents=150, reports_per_incident=2)
+    return ds.texts_l
+
+
+def train(arch: str, *, smoke: bool = True, steps_n: int = 50, batch: int = 8,
+          seq: int = 128, ckpt_dir: str = "/tmp/repro_ckpt", ckpt_every: int = 20,
+          fail_at: int = -1, mesh_kind: str = "host", seed: int = 0,
+          grad_compression: str = "none", log_every: int = 10) -> dict:
+    cfg = get_smoke(arch) if smoke else get_config(arch)
+    mesh = (make_host_mesh() if mesh_kind == "host"
+            else make_production_mesh(multi_pod=(mesh_kind == "multi")))
+    env = AxisEnv.from_mesh(mesh)
+    tcfg = TrainConfig(total_steps=steps_n, warmup_steps=max(steps_n // 10, 1),
+                       checkpoint_dir=ckpt_dir, checkpoint_every=ckpt_every,
+                       grad_compression=grad_compression)
+    data = PackedLMDataset(
+        corpus_texts(),
+        PackedLMConfig(seq_len=seq, batch_size=batch, seed=seed),
+        vocab_size=cfg.vocab_size)
+    loader = PrefetchLoader(data)
+
+    params = transformer.init_params(cfg, jax.random.PRNGKey(seed))
+    opt = adamw.init_opt_state(params)
+    start = 0
+    latest = ckpt.latest_step(ckpt_dir)
+    if latest is not None:
+        (params, opt), start = ckpt.restore(ckpt_dir, (params, opt))
+        print(f"[train] resumed from checkpoint step {start}")
+
+    train_step = jax.jit(steps.make_train_step(cfg, tcfg))
+    metrics = {}
+    t0 = time.time()
+    for step in range(start, steps_n):
+        if step == fail_at:
+            raise SimulatedFailure(f"injected failure at step {step}")
+        b = loader.next()
+        batch_dev = {k: jnp.asarray(v) for k, v in b.items()}
+        params, opt, metrics = train_step(params, opt, batch_dev)
+        if (step + 1) % ckpt_every == 0 or step + 1 == steps_n:
+            ckpt.save(ckpt_dir, step + 1, (params, opt))
+        if (step + 1) % log_every == 0:
+            print(f"[train] step {step+1}/{steps_n} "
+                  f"loss={float(metrics['loss']):.4f} "
+                  f"lr={float(metrics['lr']):.2e} "
+                  f"({(time.time()-t0)/max(step+1-start,1):.2f}s/step, "
+                  f"backup_batches={loader.backup_batches})")
+    loader.close()
+    return {"loss": float(metrics.get("loss", float("nan"))), "steps": steps_n,
+            "params": transformer.count_params(cfg)}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mistral-nemo-12b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--checkpoint-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--checkpoint-every", type=int, default=20)
+    ap.add_argument("--fail-at", type=int, default=-1)
+    ap.add_argument("--mesh", default="host")
+    ap.add_argument("--grad-compression", default="none")
+    args = ap.parse_args()
+    out = train(args.arch, smoke=args.smoke, steps_n=args.steps,
+                batch=args.batch, seq=args.seq, ckpt_dir=args.checkpoint_dir,
+                ckpt_every=args.checkpoint_every, fail_at=args.fail_at,
+                mesh_kind=args.mesh, grad_compression=args.grad_compression)
+    print(f"[train] done: {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,277 @@
+"""Attention blocks: GQA (+RoPE), MLA (DeepSeek-V2 latent attention), cross-attn.
+
+All variants support three execution modes used by the launchers:
+  * train/prefill: full-sequence causal attention, returns updated cache
+  * decode: single-token query against a fixed-capacity KV cache
+
+MLA keeps the paper-faithful (naive) path — materialize per-head K/V from the
+latent — and an ``absorb`` decode path (weight absorption: score against the
+512-dim latent cache directly), which is one of the beyond-paper perf levers
+recorded in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import MLAConfig, ModelConfig
+from repro.models.layers import ParamDef, ParamTree
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (B, S, H, D); positions: (B, S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                     # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, D/2)
+    cos = jnp.cos(angles)[..., None, :]              # (B, S, 1, D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def gqa_defs(cfg: ModelConfig) -> ParamTree:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    return {
+        "wq": ParamDef((d, cfg.num_heads, hd), ("fsdp", "tp", None)),
+        "wk": ParamDef((d, cfg.num_kv_heads, hd), ("fsdp", "tp", None)),
+        "wv": ParamDef((d, cfg.num_kv_heads, hd), ("fsdp", "tp", None)),
+        "wo": ParamDef((cfg.num_heads, hd, d), ("tp", None, "fsdp")),
+    }
+
+
+def _sdpa(q, k, v, *, causal: bool, q_offset, softcap: float = 0.0,
+          valid_from=None, scores_dtype=None):
+    """q: (B,S,H,D) k/v: (B,T,Hkv,D) with H = G*Hkv. Grouped causal attention.
+
+    q_offset: scalar position offset of q[.,0] relative to k[.,0] (decode).
+    valid_from: optional (B,) int32 — cache/key positions < valid_from[b]
+    are masked (left-padded serving batches).
+    """
+    b, s, h, d = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    q = q.reshape(b, s, hkv, g, d)
+    sdt = scores_dtype or jnp.float32
+    scores = jnp.einsum("bshgd,bthd->bhgst", q.astype(jnp.float32),
+                        k.astype(jnp.float32))
+    scores = scores / math.sqrt(d)
+    if softcap > 0.0:
+        scores = softcap * jnp.tanh(scores / softcap)
+    if causal:
+        qpos = jnp.arange(s) + q_offset
+        kpos = jnp.arange(t)
+        mask = (kpos[None, :] <= qpos[:, None])[None]            # (1, S, T)
+        if valid_from is not None:
+            mask = mask & (kpos[None, None, :] >= valid_from[:, None, None])
+        scores = jnp.where(mask[:, None, None], scores, -1e30)
+    # probs materialized in sdt (bf16 halves one of the two S^2 planes)
+    probs = jax.nn.softmax(scores, axis=-1).astype(sdt)
+    out = jnp.einsum("bhgst,bthd->bshgd", probs, v.astype(sdt))
+    return out.reshape(b, s, h, d).astype(v.dtype)
+
+
+def gqa_attention(
+    params: ParamTree,
+    x: jnp.ndarray,                      # (B, S, D)
+    positions: jnp.ndarray,              # (B, S)
+    cfg: ModelConfig,
+    cache: Optional[dict] = None,        # {"k","v": (B, T, Hkv, hd), "index": scalar}
+    compute_dtype=jnp.bfloat16,
+    valid_from=None,
+):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(compute_dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(compute_dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(compute_dtype))
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    sdt = jnp.dtype(cfg.attn_scores_dtype)
+    new_cache = None
+    if cache is None:
+        out = _sdpa(q, k, v, causal=True, q_offset=0, valid_from=valid_from,
+                    scores_dtype=sdt)
+    else:
+        idx = cache["index"]
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), idx, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), idx, axis=1)
+        # mask out unwritten cache slots via causal offset
+        out = _sdpa(q, ck, cv, causal=True, q_offset=idx, valid_from=valid_from,
+                    scores_dtype=sdt)
+        new_cache = {"k": ck, "v": cv, "index": idx + x.shape[1]}
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(compute_dtype))
+    return out, new_cache
+
+
+def gqa_cache_defs(cfg: ModelConfig, batch: int, capacity: int) -> dict:
+    hd = cfg.resolved_head_dim
+    shape = (batch, capacity, cfg.num_kv_heads, hd)
+    return {
+        "k": (shape, ("batch", None, "tp", None), "bfloat16"),
+        "v": (shape, ("batch", None, "tp", None), "bfloat16"),
+        "index": ((), (), "int32"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MLA — multi-head latent attention (DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+def mla_defs(cfg: ModelConfig) -> ParamTree:
+    d, m = cfg.d_model, cfg.mla
+    assert m is not None
+    qd = m.qk_nope_head_dim + m.qk_rope_head_dim
+    defs = {
+        # latent KV down-projection + decoupled rope key
+        "w_dkv": ParamDef((d, m.kv_lora_rank), ("fsdp", "tp")),
+        "w_kr": ParamDef((d, m.qk_rope_head_dim), ("fsdp", None)),
+        "kv_norm": ParamDef((m.kv_lora_rank,), (None,), init="ones"),
+        # up-projections from latent to per-head K(nope)/V
+        "w_uk": ParamDef((m.kv_lora_rank, cfg.num_heads, m.qk_nope_head_dim), (None, "tp", None)),
+        "w_uv": ParamDef((m.kv_lora_rank, cfg.num_heads, m.v_head_dim), (None, "tp", None)),
+        "wo": ParamDef((cfg.num_heads, m.v_head_dim, d), ("tp", None, "fsdp")),
+    }
+    if m.q_lora_rank:
+        defs["w_dq"] = ParamDef((d, m.q_lora_rank), ("fsdp", "tp"))
+        defs["q_norm"] = ParamDef((m.q_lora_rank,), (None,), init="ones")
+        defs["w_uq"] = ParamDef((m.q_lora_rank, cfg.num_heads, qd), (None, "tp", None))
+    else:
+        defs["wq"] = ParamDef((d, cfg.num_heads, qd), ("fsdp", "tp", None))
+    return defs
+
+
+def _mla_q(params, x, cfg: ModelConfig, compute_dtype):
+    m = cfg.mla
+    from repro.models.layers import rms_norm
+    if m.q_lora_rank:
+        cq = jnp.einsum("bsd,dr->bsr", x, params["w_dq"].astype(compute_dtype))
+        cq = rms_norm(cq, params["q_norm"], cfg.norm_eps)
+        q = jnp.einsum("bsr,rhk->bshk", cq, params["w_uq"].astype(compute_dtype))
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(compute_dtype))
+    return q
+
+
+def mla_attention(
+    params: ParamTree,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    cfg: ModelConfig,
+    cache: Optional[dict] = None,   # {"ckv": (B,T,R), "kr": (B,T,Dr), "index"}
+    compute_dtype=jnp.bfloat16,
+    absorb: bool = True,
+    valid_from=None,
+):
+    """DeepSeek-V2 attention. Cache stores only (latent 512 + rope 64) per tok.
+
+    absorb=True scores queries against the latent directly (W_uk folded into
+    q) — the optimized decode path; absorb=False materializes K/V per head
+    (paper-faithful reference path, used for training/prefill).
+    """
+    from repro.models.layers import rms_norm
+    m = cfg.mla
+    b, s, _ = x.shape
+    q = _mla_q(params, x, cfg, compute_dtype)                     # (B,S,H,qd)
+    q_nope = q[..., : m.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., m.qk_nope_head_dim :], positions, cfg.rope_theta)
+
+    ckv = jnp.einsum("bsd,dr->bsr", x, params["w_dkv"].astype(compute_dtype))
+    ckv = rms_norm(ckv, params["kv_norm"], cfg.norm_eps)
+    kr = jnp.einsum("bsd,dk->bsk", x, params["w_kr"].astype(compute_dtype))
+    kr = apply_rope(kr[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
+
+    new_cache = None
+    if cache is not None:
+        idx = cache["index"]
+        ckv = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv.astype(cache["ckv"].dtype), idx, axis=1)
+        kr = jax.lax.dynamic_update_slice_in_dim(cache["kr"], kr.astype(cache["kr"].dtype), idx, axis=1)
+        new_cache = {"ckv": ckv, "kr": kr, "index": idx + s}
+        q_offset = idx
+    else:
+        q_offset = 0
+    t = ckv.shape[1]
+
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    sdt = jnp.dtype(cfg.attn_scores_dtype)
+    if absorb:
+        # fold W_uk into q: q_lat (B,S,H,R); scores = q_lat . ckv + q_rope . kr
+        q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, params["w_uk"].astype(compute_dtype))
+        s_nope = jnp.einsum("bshr,btr->bhst", q_lat.astype(jnp.float32),
+                            ckv.astype(jnp.float32))
+        s_rope = jnp.einsum("bshk,btk->bhst", q_rope.astype(jnp.float32),
+                            kr.astype(jnp.float32))
+        scores = (s_nope + s_rope) * scale
+        qpos = jnp.arange(s) + q_offset
+        kpos = jnp.arange(t)
+        mask = (kpos[None, :] <= qpos[:, None])[None]
+        if valid_from is not None:
+            mask = mask & (kpos[None, None, :] >= valid_from[:, None, None])
+        scores = jnp.where(mask[:, None], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(sdt)
+        # out = probs @ V = probs @ (ckv W_uv): fold combine into latent too
+        o_lat = jnp.einsum("bhst,btr->bshr", probs, ckv.astype(sdt))
+        out = jnp.einsum("bshr,rhv->bshv", o_lat.astype(compute_dtype), params["w_uv"].astype(compute_dtype))
+    else:
+        k_nope = jnp.einsum("btr,rhk->bthk", ckv, params["w_uk"].astype(compute_dtype))
+        v = jnp.einsum("btr,rhv->bthv", ckv, params["w_uv"].astype(compute_dtype))
+        k = jnp.concatenate([k_nope, jnp.broadcast_to(kr[:, :, None, :], (b, t, cfg.num_heads, m.qk_rope_head_dim))], axis=-1)
+        qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+        out = _sdpa(qf, k, v, causal=True, q_offset=q_offset, valid_from=valid_from,
+                scores_dtype=sdt)
+    out = jnp.einsum("bshv,hvd->bsd", out, params["wo"].astype(compute_dtype))
+    return out, new_cache
+
+
+def mla_cache_defs(cfg: ModelConfig, batch: int, capacity: int) -> dict:
+    m = cfg.mla
+    return {
+        "ckv": ((batch, capacity, m.kv_lora_rank), ("batch", None, "tp"), "bfloat16"),
+        "kr": ((batch, capacity, m.qk_rope_head_dim), ("batch", None, None), "bfloat16"),
+        "index": ((), (), "int32"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (VLM / audio memory)
+# ---------------------------------------------------------------------------
+
+def cross_attn_defs(cfg: ModelConfig) -> ParamTree:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    return {
+        "wq": ParamDef((d, cfg.num_heads, hd), ("fsdp", "tp", None)),
+        "wk": ParamDef((d, cfg.num_kv_heads, hd), ("fsdp", "tp", None)),
+        "wv": ParamDef((d, cfg.num_kv_heads, hd), ("fsdp", "tp", None)),
+        "wo": ParamDef((cfg.num_heads, hd, d), ("tp", None, "fsdp")),
+        "gate": ParamDef((), (), init="zeros"),
+    }
+
+
+def cross_attention(
+    params: ParamTree,
+    x: jnp.ndarray,              # (B, S, D)
+    memory: jnp.ndarray,         # (B, M, D) — precomputed patch/frame embeddings
+    cfg: ModelConfig,
+    compute_dtype=jnp.bfloat16,
+):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(compute_dtype))
+    k = jnp.einsum("bmd,dhk->bmhk", memory.astype(compute_dtype), params["wk"].astype(compute_dtype))
+    v = jnp.einsum("bmd,dhk->bmhk", memory.astype(compute_dtype), params["wv"].astype(compute_dtype))
+    out = _sdpa(q, k, v, causal=False, q_offset=0)
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(compute_dtype))
+    return jnp.tanh(params["gate"].astype(jnp.float32)).astype(out.dtype) * out

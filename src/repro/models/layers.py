@@ -1,0 +1,120 @@
+"""Core layer primitives: parameter definitions, norms, FFNs, embeddings.
+
+Parameters are declared once as ``ParamDef`` (shape + logical dim names +
+initializer); the same declaration yields (a) materialized weights, (b) a
+matching PartitionSpec tree for pjit, and (c) exact parameter counts via
+``jax.eval_shape`` — no dual bookkeeping.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.mesh import AxisEnv
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple
+    logical: tuple              # logical dim names, same length as shape
+    init: str = "normal"        # normal | zeros | ones | scaled_normal
+    scale: float = 1.0
+    dtype: str = "float32"
+
+    def initialize(self, key) -> jnp.ndarray:
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, self.dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, self.dtype)
+        fan_in = self.shape[0] if len(self.shape) > 1 else max(self.shape[0], 1)
+        std = self.scale / math.sqrt(fan_in)
+        return (jax.random.normal(key, self.shape) * std).astype(self.dtype)
+
+
+ParamTree = dict  # nested dict of ParamDef / arrays
+
+
+def init_tree(defs: ParamTree, key) -> ParamTree:
+    """Materialize a tree of ParamDef into arrays with per-leaf keys."""
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    keys = jax.random.split(key, len(leaves))
+    vals = [d.initialize(k) for d, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def spec_tree(defs: ParamTree, env: AxisEnv) -> ParamTree:
+    return jax.tree.map(
+        lambda d: env.resolve(d.logical),
+        defs,
+        is_leaf=lambda x: isinstance(x, ParamDef),
+    )
+
+
+def abstract_tree(defs: ParamTree) -> ParamTree:
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype),
+        defs,
+        is_leaf=lambda x: isinstance(x, ParamDef),
+    )
+
+
+def count_tree(defs: ParamTree) -> int:
+    leaves = jax.tree.leaves(defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    return int(sum(int(np.prod(d.shape)) for d in leaves))
+
+
+def stack_defs(defs: ParamTree, n: int) -> ParamTree:
+    """Prepend a scan (layers) dim to every ParamDef in the tree."""
+    return jax.tree.map(
+        lambda d: ParamDef((n,) + d.shape, (None,) + d.logical, d.init, d.scale, d.dtype),
+        defs,
+        is_leaf=lambda x: isinstance(x, ParamDef),
+    )
+
+
+# ---------------------------------------------------------------------------
+# numerics
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32)).astype(dt)
+
+
+def swiglu(x: jnp.ndarray, w_gate, w_up, w_down, compute_dtype) -> jnp.ndarray:
+    g = jnp.einsum("...d,df->...f", x, w_gate.astype(compute_dtype))
+    u = jnp.einsum("...d,df->...f", x, w_up.astype(compute_dtype))
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("...f,fd->...d", h, w_down.astype(compute_dtype))
+
+
+def dense_ffn_defs(d_model: int, d_ff: int) -> ParamTree:
+    return {
+        "w_gate": ParamDef((d_model, d_ff), ("fsdp", "tp")),
+        "w_up": ParamDef((d_model, d_ff), ("fsdp", "tp")),
+        "w_down": ParamDef((d_ff, d_model), ("tp", "fsdp")),
+    }
+
+
+def dense_ffn(params, x, compute_dtype) -> jnp.ndarray:
+    return swiglu(x, params["w_gate"], params["w_up"], params["w_down"], compute_dtype)
+
+
+def embedding_defs(vocab: int, d_model: int) -> ParamTree:
+    return {"embedding": ParamDef((vocab, d_model), ("tp", "fsdp"), scale=1.0)}
+
+
+def softcap(logits: jnp.ndarray, cap: float) -> jnp.ndarray:
+    if cap <= 0.0:
+        return logits
+    return cap * jnp.tanh(logits / cap)

@@ -1,0 +1,364 @@
+"""Mixture-of-Experts FFN with expert parallelism.
+
+Two execution paths:
+
+* ``dense`` — per-token top-k routing combined with a dense per-expert einsum
+  over a capacity-gathered buffer. Used for smoke tests and single-device runs.
+* ``ep`` — production path: tokens are scattered into fixed-capacity
+  per-destination-shard buffers, exchanged with ``lax.all_to_all`` over the
+  ``model`` (expert) mesh axis inside shard_map, computed against the local
+  expert shard, and returned.  Fixed shapes throughout (capacity-factor
+  dropping), fully differentiable (scatter/gather + einsum only).
+
+Aux losses: switch-style load-balance loss + router z-loss.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig, MoEConfig
+from repro.models.layers import ParamDef, ParamTree
+
+
+def moe_defs(cfg: ModelConfig) -> ParamTree:
+    mo = cfg.moe
+    d = cfg.d_model
+    defs = {
+        "router": ParamDef((d, mo.num_experts), (None, None), scale=0.1),
+        "w_gate": ParamDef((mo.num_experts, d, mo.expert_d_ff), ("expert", "fsdp", None)),
+        "w_up": ParamDef((mo.num_experts, d, mo.expert_d_ff), ("expert", "fsdp", None)),
+        "w_down": ParamDef((mo.num_experts, mo.expert_d_ff, d), ("expert", None, "fsdp")),
+    }
+    if mo.num_shared_experts > 0:
+        ff = mo.shared_d_ff * mo.num_shared_experts
+        defs["shared"] = {
+            "w_gate": ParamDef((d, ff), ("fsdp", None)),
+            "w_up": ParamDef((d, ff), ("fsdp", None)),
+            "w_down": ParamDef((ff, d), (None, "fsdp")),
+        }
+    return defs
+
+
+def _router(params, x_flat, mo: MoEConfig):
+    """x_flat: (T, d) -> weights (T,k), ids (T,k), aux_loss scalar."""
+    logits = jnp.einsum("td,de->te", x_flat.astype(jnp.float32), params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, ids = jax.lax.top_k(probs, mo.top_k)
+    weights = weights / jnp.clip(jnp.sum(weights, axis=-1, keepdims=True), 1e-9)
+    # load-balance loss (Switch): E * sum_e f_e * p_e
+    e = mo.num_experts
+    counts = jnp.zeros((e,), jnp.float32).at[ids.reshape(-1)].add(1.0)
+    frac_tokens = counts / jnp.maximum(jnp.sum(counts), 1.0)
+    frac_probs = jnp.mean(probs, axis=0)
+    aux = mo.router_aux_loss_coef * e * jnp.sum(frac_tokens * frac_probs)
+    aux = aux + mo.router_z_loss_coef * jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    return weights, ids, aux
+
+
+def _expert_ffn(w_gate, w_up, w_down, x, compute_dtype):
+    """x: (E, C, d); weights: (E, d, ff)/(E, ff, d)."""
+    g = jnp.einsum("ecd,edf->ecf", x, w_gate.astype(compute_dtype))
+    u = jnp.einsum("ecd,edf->ecf", x, w_up.astype(compute_dtype))
+    return jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, w_down.astype(compute_dtype))
+
+
+def _capacity_gather(x_flat, flat_ids, flat_w, num_buckets, capacity):
+    """Scatter token copies into (num_buckets, capacity, d) buffers.
+
+    Returns (buf, tok_idx, w_in_buf, bucket_pos) where invalid slots carry
+    tok_idx == T (out-of-range, dropped on combine).
+    """
+    t, d = x_flat.shape
+    n = flat_ids.shape[0]
+    # position of each choice within its bucket (stable, order-of-arrival)
+    onehot = jax.nn.one_hot(flat_ids, num_buckets, dtype=jnp.int32)     # (N, B)
+    pos = jnp.cumsum(onehot, axis=0) - 1                                 # (N, B)
+    pos = jnp.sum(pos * onehot, axis=1)                                  # (N,)
+    valid = pos < capacity
+    tok_of_choice = jnp.arange(n) // (n // t)                            # (N,)
+    b_idx = jnp.where(valid, flat_ids, num_buckets)                      # drop
+    p_idx = jnp.where(valid, pos, 0)
+    buf = jnp.zeros((num_buckets, capacity, d), x_flat.dtype)
+    buf = buf.at[b_idx, p_idx].set(x_flat[tok_of_choice], mode="drop")
+    tok_idx = jnp.full((num_buckets, capacity), t, jnp.int32)
+    tok_idx = tok_idx.at[b_idx, p_idx].set(tok_of_choice, mode="drop")
+    w_buf = jnp.zeros((num_buckets, capacity), flat_w.dtype)
+    w_buf = w_buf.at[b_idx, p_idx].set(flat_w, mode="drop")
+    return buf, tok_idx, w_buf
+
+
+def moe_ffn_dense(params, x, cfg: ModelConfig, compute_dtype=jnp.bfloat16):
+    """Single-shard capacity-based MoE (smoke tests / reference)."""
+    mo = cfg.moe
+    b, s, d = x.shape
+    x_flat = x.reshape(-1, d)
+    t = x_flat.shape[0]
+    weights, ids, aux = _router(params, x_flat, mo)
+    flat_ids = ids.reshape(-1)
+    flat_w = weights.reshape(-1).astype(compute_dtype)
+    capacity = max(int(math.ceil(t * mo.top_k / mo.num_experts * mo.capacity_factor)), 4)
+    buf, tok_idx, w_buf = _capacity_gather(x_flat, flat_ids, flat_w, mo.num_experts, capacity)
+    y = _expert_ffn(params["w_gate"], params["w_up"], params["w_down"], buf, compute_dtype)
+    y = y * w_buf[..., None]
+    out = jnp.zeros((t + 1, d), y.dtype).at[tok_idx.reshape(-1)].add(y.reshape(-1, d), mode="drop")
+    out = out[:t].reshape(b, s, d)
+    if mo.num_shared_experts > 0:
+        from repro.models.layers import dense_ffn
+        out = out + dense_ffn(params["shared"], x, compute_dtype)
+    return out, aux
+
+
+def moe_ffn_ep_replicated(params, x, cfg: ModelConfig, axis_name: str = "model",
+                          compute_dtype=jnp.bfloat16):
+    """EP path for token sets *replicated* over the expert axis (decode).
+
+    Each shard routes the full local token set but keeps only choices landing
+    on its local experts; outputs are psum-combined over the expert axis.
+    """
+    mo = cfg.moe
+    my_shard = jax.lax.axis_index(axis_name)
+    e_loc = params["w_gate"].shape[0]
+    b, s, d = x.shape
+    x_flat = x.reshape(-1, d)
+    t = x_flat.shape[0]
+    weights, ids, aux = _router(params, x_flat, mo)
+    flat_ids = ids.reshape(-1)
+    flat_w = weights.reshape(-1).astype(compute_dtype)
+    mine = (flat_ids // e_loc) == my_shard
+    local_ids = jnp.where(mine, flat_ids % e_loc, e_loc)      # e_loc => dropped
+    cap = max(int(math.ceil(t * mo.top_k / mo.num_experts * mo.capacity_factor)), 4)
+    buf, tok_idx, w_buf = _capacity_gather(x_flat, local_ids, flat_w, e_loc, cap)
+    y = _expert_ffn(params["w_gate"], params["w_up"], params["w_down"], buf, compute_dtype)
+    y = y * w_buf[..., None]
+    out = jnp.zeros((t + 1, d), y.dtype).at[tok_idx.reshape(-1)].add(
+        y.reshape(-1, d), mode="drop")[:t]
+    out = jax.lax.psum(out, axis_name)
+    out = out.reshape(b, s, d)
+    if mo.num_shared_experts > 0:
+        from repro.models.layers import dense_ffn
+        out = out + dense_ffn(params["shared"], x, compute_dtype)
+    return out, aux
+
+
+def moe_ffn_ep(params, x, cfg: ModelConfig, axis_name: str = "model",
+               compute_dtype=jnp.bfloat16):
+    """Expert-parallel MoE body. Must run inside shard_map.
+
+    x: (B_loc, S_loc, d) — local token shard. Expert weights arrive as local
+    shards (E_loc, d, ff). Router/shared weights are replicated.
+    """
+    mo = cfg.moe
+    ways = jax.lax.axis_size(axis_name)
+    my_shard = jax.lax.axis_index(axis_name)
+    e_loc = params["w_gate"].shape[0]          # local expert count
+    b, s, d = x.shape
+    x_flat = x.reshape(-1, d)
+    t = x_flat.shape[0]
+
+    weights, ids, aux = _router(params, x_flat, mo)
+    flat_ids = ids.reshape(-1)
+    flat_w = weights.reshape(-1).astype(compute_dtype)
+
+    # --- dispatch to destination shards -----------------------------------
+    dest = flat_ids // e_loc
+    send_cap = max(int(math.ceil(t * mo.top_k / ways * mo.capacity_factor)), 4)
+    send, tok_idx, w_send = _capacity_gather(x_flat, dest, flat_w, ways, send_cap)
+    # carry local expert id alongside (drop slots get id 0, weight 0)
+    le_buf = jnp.zeros((ways, send_cap), jnp.int32)
+    onehot = jax.nn.one_hot(dest, ways, dtype=jnp.int32)
+    pos = jnp.sum((jnp.cumsum(onehot, axis=0) - 1) * onehot, axis=1)
+    valid = pos < send_cap
+    bi = jnp.where(valid, dest, ways)
+    pi = jnp.where(valid, pos, 0)
+    le_buf = le_buf.at[bi, pi].set(flat_ids % e_loc, mode="drop")
+
+    recv = jax.lax.all_to_all(send, axis_name, split_axis=0, concat_axis=0, tiled=True)
+    le_recv = jax.lax.all_to_all(le_buf, axis_name, split_axis=0, concat_axis=0, tiled=True)
+    w_recv = jax.lax.all_to_all(w_send, axis_name, split_axis=0, concat_axis=0, tiled=True)
+
+    # --- local expert compute ----------------------------------------------
+    r = ways * send_cap
+    recv_flat = recv.reshape(r, d)
+    le_flat = le_recv.reshape(r)
+    w_flat = w_recv.reshape(r)
+    # invalid slots have weight zero; bucket them anyway (harmless)
+    cap2 = max(int(math.ceil(r / e_loc * mo.capacity_factor)), 4)
+    ebuf, ridx, w_ebuf = _capacity_gather(recv_flat, le_flat, w_flat, e_loc, cap2)
+    y = _expert_ffn(params["w_gate"], params["w_up"], params["w_down"], ebuf, compute_dtype)
+    y = y * w_ebuf[..., None]
+    # scatter back to recv layout, weighted
+    y_recv = jnp.zeros((r + 1, d), y.dtype).at[ridx.reshape(-1)].add(
+        y.reshape(-1, d), mode="drop")[:r]
+    y_send = jax.lax.all_to_all(
+        y_recv.reshape(ways, send_cap, d), axis_name, split_axis=0, concat_axis=0, tiled=True)
+
+    # --- combine ------------------------------------------------------------
+    out = jnp.zeros((t + 1, d), y_send.dtype).at[tok_idx.reshape(-1)].add(
+        y_send.reshape(-1, d), mode="drop")[:t]
+    out = out.reshape(b, s, d)
+    if mo.num_shared_experts > 0:
+        from repro.models.layers import dense_ffn
+        out = out + dense_ffn(params["shared"], x, compute_dtype)
+    return out, aux
+
+
+def moe_block_sharded(params, x, cfg: ModelConfig, mesh, env,
+                      compute_dtype=jnp.bfloat16):
+    """shard_map wrapper: expert weights arrive as local shards; FSDP-sharded
+    dims are re-gathered in compute dtype inside the body.
+
+    Chooses the all-to-all path when the sequence dim is SP-sharded over the
+    expert axis (train/prefill), else the replicated-token psum path (decode).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    mo = cfg.moe
+    model_ways = mesh.shape.get("model", 1)
+    b, s, d = x.shape
+    sp_ok = s % model_ways == 0 and s >= model_ways and s > 1
+    batch_ax = env.batch if (b % max(_ways(mesh, env.batch), 1) == 0
+                             and b >= _ways(mesh, env.batch)) else ()
+    bspec = _axspec(batch_ax)
+    x_spec = P(bspec, "model" if sp_ok else None, None)
+
+    pspec = {
+        "router": P(None, None),
+        "w_gate": P("model", _axspec(env.fsdp), None),
+        "w_up": P("model", _axspec(env.fsdp), None),
+        "w_down": P("model", None, _axspec(env.fsdp)),
+    }
+    if "shared" in params:
+        pspec["shared"] = {
+            "w_gate": P(_axspec(env.fsdp), None),
+            "w_up": P(_axspec(env.fsdp), None),
+            "w_down": P(None, _axspec(env.fsdp)),
+        }
+
+    all_axes = tuple(mesh.axis_names)
+
+    def body(params_l, x_l):
+        # re-gather FSDP-sharded weight dims in compute dtype
+        fs = env.fsdp
+        pl = dict(params_l)
+        if (not sp_ok) and model_ways > 1:
+            # decode: keep weights sharded; activation-flow partial sums
+            out, aux = moe_ffn_ep_replicated_dsharded(
+                params_l, x_l, cfg, "model", tuple(fs), compute_dtype)
+            vary = tuple(batch_ax) + tuple(fs)
+            if vary:
+                aux = jax.lax.pmean(aux, vary)
+            return out, aux
+        if fs:
+            pl["w_gate"] = _gather(params_l["w_gate"].astype(compute_dtype), fs, 1)
+            pl["w_up"] = _gather(params_l["w_up"].astype(compute_dtype), fs, 1)
+            pl["w_down"] = _gather(params_l["w_down"].astype(compute_dtype), fs, 2)
+            if "shared" in params_l:
+                pl["shared"] = {
+                    "w_gate": _gather(params_l["shared"]["w_gate"].astype(compute_dtype), fs, 0),
+                    "w_up": _gather(params_l["shared"]["w_up"].astype(compute_dtype), fs, 0),
+                    "w_down": _gather(params_l["shared"]["w_down"].astype(compute_dtype), fs, 1),
+                }
+        if sp_ok and model_ways > 1:
+            out, aux = moe_ffn_ep(pl, x_l, cfg, "model", compute_dtype)
+            vary = tuple(batch_ax) + ("model",)
+        elif model_ways > 1:
+            out, aux = moe_ffn_ep_replicated(pl, x_l, cfg, "model", compute_dtype)
+            vary = tuple(batch_ax)           # tokens replicated over model
+        else:
+            out, aux = moe_ffn_dense(pl, x_l, cfg, compute_dtype)
+            vary = tuple(batch_ax)
+        if vary:
+            aux = jax.lax.pmean(aux, vary)
+        return out, aux
+
+    fn = jax.shard_map(body, mesh=mesh, in_specs=(pspec, x_spec),
+                       out_specs=(x_spec, P()))
+    return fn(params, x)
+
+
+def _ways(mesh, axes):
+    n = 1
+    for a in axes:
+        n *= mesh.shape.get(a, 1)
+    return n
+
+
+def _axspec(axes):
+    if not axes:
+        return None
+    return axes[0] if len(axes) == 1 else tuple(axes)
+
+
+def _gather(x, axes, dim):
+    for a in reversed(axes):
+        x = jax.lax.all_gather(x, a, axis=dim, tiled=True)
+    return x
+
+
+def moe_ffn_ep_replicated_dsharded(params, x, cfg: ModelConfig, axis_name,
+                                   fsdp_axes, compute_dtype=jnp.bfloat16):
+    """Decode-path EP without weight gathers (activation-flow partials).
+
+    Expert weights stay FSDP-sharded on the d_model dim; each shard computes
+    a partial matmul on its d-slice of the (few) decode tokens and partial
+    sums are combined with psum — moving KB of activations instead of GB of
+    weights per layer per step.  §Perf hillclimb for the decode cells.
+    """
+    mo = cfg.moe
+    my_shard = jax.lax.axis_index(axis_name)
+    e_loc, d_loc = params["w_gate"].shape[0], params["w_gate"].shape[1]
+    b, s, d = x.shape
+    x_flat = x.reshape(-1, d)
+    t = x_flat.shape[0]
+    weights, ids, aux = _router(params, x_flat, mo)
+    flat_ids = ids.reshape(-1)
+    flat_w = weights.reshape(-1).astype(compute_dtype)
+    mine = (flat_ids // e_loc) == my_shard
+    local_ids = jnp.where(mine, flat_ids % e_loc, e_loc)
+    cap = max(int(math.ceil(t * mo.top_k / mo.num_experts * mo.capacity_factor)), 4)
+
+    # flattened fsdp shard index and this shard's d-slice of the tokens
+    fi = jnp.zeros((), jnp.int32)
+    for a in fsdp_axes:
+        fi = fi * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+    x_loc = jax.lax.dynamic_slice_in_dim(x_flat, fi * d_loc, d_loc, axis=1)
+
+    buf, tok_idx, w_buf = _capacity_gather(x_loc.astype(compute_dtype),
+                                           local_ids, flat_w, e_loc, cap)
+    g = jnp.einsum("ecd,edf->ecf", buf, params["w_gate"].astype(compute_dtype))
+    u = jnp.einsum("ecd,edf->ecf", buf, params["w_up"].astype(compute_dtype))
+    if fsdp_axes:
+        gu = jax.lax.psum(jnp.stack([g, u]), fsdp_axes)   # one fused psum
+        g, u = gu[0], gu[1]
+    h = jax.nn.silu(g) * u
+    y = jnp.einsum("ecf,efd->ecd", h, params["w_down"].astype(compute_dtype))
+    y = y * w_buf[..., None]                              # (E_loc, cap, d_loc)
+    out_loc = jnp.zeros((t + 1, d_loc), y.dtype).at[tok_idx.reshape(-1)].add(
+        y.reshape(-1, d_loc), mode="drop")[:t]
+    out_loc = jax.lax.psum(out_loc, axis_name)            # combine experts
+
+    if mo.num_shared_experts > 0:
+        sh = params["shared"]
+        gs = jnp.einsum("td,df->tf", x_loc.astype(compute_dtype),
+                        sh["w_gate"].astype(compute_dtype))
+        us = jnp.einsum("td,df->tf", x_loc.astype(compute_dtype),
+                        sh["w_up"].astype(compute_dtype))
+        if fsdp_axes:
+            gus = jax.lax.psum(jnp.stack([gs, us]), fsdp_axes)
+            gs, us = gus[0], gus[1]
+        ys = jnp.einsum("tf,fd->td", jax.nn.silu(gs) * us,
+                        sh["w_down"].astype(compute_dtype))
+        out_loc = out_loc + ys
+    if fsdp_axes:
+        out = out_loc
+        for a in reversed(fsdp_axes):
+            out = jax.lax.all_gather(out, a, axis=1, tiled=True)
+    else:
+        out = out_loc
+    return out.reshape(b, s, d), aux

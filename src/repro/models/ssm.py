@@ -1,0 +1,424 @@
+"""State-space / recurrent blocks: Mamba2 (chunked SSD), xLSTM (mLSTM, sLSTM).
+
+Training/prefill uses the chunked-parallel forms (quadratic only within a
+fixed ``chunk``, linear across chunks via ``lax.scan``); decode uses O(1)
+recurrent state updates — these are the sub-quadratic paths that make the
+``long_500k`` cell runnable.
+
+All state math in float32; projections in the model compute dtype.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig, SSMConfig
+from repro.models.layers import ParamDef, ParamTree, rms_norm
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD), single B/C group
+# ---------------------------------------------------------------------------
+
+def _mamba_dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nh = s.num_heads or (d_in // s.head_dim)
+    return d_in, nh, s.head_dim, s.state_dim
+
+
+def mamba2_defs(cfg: ModelConfig) -> ParamTree:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in, nh, p, n = _mamba_dims(cfg)
+    conv_ch = d_in + 2 * n
+    return {
+        "in_proj": ParamDef((d, 2 * d_in + 2 * n + nh), ("fsdp", "tp")),
+        "conv_w": ParamDef((s.conv_dim, conv_ch), (None, "tp"), scale=0.5),
+        "conv_b": ParamDef((conv_ch,), ("tp",), init="zeros"),
+        "A_log": ParamDef((nh,), (None,), init="ones"),
+        "D": ParamDef((nh,), (None,), init="ones"),
+        "dt_bias": ParamDef((nh,), (None,), init="zeros"),
+        "norm": ParamDef((d_in,), ("tp",), init="ones"),
+        "out_proj": ParamDef((d_in, d), ("tp", "fsdp")),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv. x: (B,S,C), w: (K,C). state: (B,K-1,C) or None."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(k))
+    new_state = xp[:, -(k - 1) :, :] if k > 1 else pad[:, :0]
+    return out + b[None, None, :], new_state
+
+
+def _ssd_chunked(xh, dt, a_log, bmat, cmat, chunk, h0=None):
+    """Chunked SSD scan.
+
+    xh: (B,S,H,P) dt: (B,S,H) bmat/cmat: (B,S,N). Returns y (B,S,H,P), h_last
+    (B,H,N,P).
+    """
+    b, s, h, p = xh.shape
+    n = bmat.shape[-1]
+    nc = s // chunk
+    c = chunk
+    f32 = jnp.float32
+    xh = xh.astype(f32).reshape(b, nc, c, h, p)
+    dt = dt.astype(f32).reshape(b, nc, c, h)
+    bm = bmat.astype(f32).reshape(b, nc, c, n)
+    cm = cmat.astype(f32).reshape(b, nc, c, n)
+    a = -jnp.exp(a_log.astype(f32))                     # (H,) negative
+    da = dt * a[None, None, None, :]                    # (B,nc,c,H) log-decay
+    cum = jnp.cumsum(da, axis=2)                        # inclusive cumsum
+    # intra-chunk: L[i,j] = exp(cum_i - cum_j) for i >= j (uses decay after j)
+    li = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,c_i,c_j,H)
+    mask = jnp.tril(jnp.ones((c, c), bool))
+    li = jnp.where(mask[None, None, :, :, None], li, -jnp.inf)
+    lmat = jnp.exp(li)
+    scores = jnp.einsum("bkin,bkjn->bkij", cm, bm)      # (B,nc,c,c)
+    wdt = dt                                             # input scaled by dt
+    y_intra = jnp.einsum("bkij,bkijh,bkjh,bkjhp->bkihp", scores, lmat, wdt, xh)
+    # chunk end states
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)      # (B,nc,c,H)
+    state_k = jnp.einsum("bkch,bkch,bkcn,bkchp->bkhnp", decay_to_end, wdt, bm, xh)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])              # (B,nc,H)
+
+    def step(h_prev, inp):
+        st, dec = inp                                    # (B,H,N,P), (B,H)
+        h_new = h_prev * dec[:, :, None, None] + st
+        return h_new, h_prev
+
+    init = jnp.zeros((b, h, n, p), f32) if h0 is None else h0.astype(f32)
+    h_last, h_prevs = jax.lax.scan(
+        step,
+        init,
+        (jnp.moveaxis(state_k, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                # (B,nc,H,N,P)
+    y_inter = jnp.einsum("bkcn,bkhnp,bkch->bkchp", cm, h_prevs, jnp.exp(cum))
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y, h_last
+
+
+def mamba2_forward(params, x, cfg: ModelConfig, state=None, compute_dtype=jnp.bfloat16,
+                   valid=None):
+    """x: (B,S,d). state: None (train/prefill from zero) or dict for decode.
+
+    state = {"conv": (B,K-1,C), "ssm": (B,H,N,P)}; decode requires S small
+    (typically 1) and uses the recurrent update.  valid: optional (B,S) bool
+    — invalid (left-pad) steps are identity in the recurrence (dt = 0).
+    """
+    s_cfg = cfg.ssm
+    d_in, nh, p, n = _mamba_dims(cfg)
+    bsz, seq, _ = x.shape
+    proj = jnp.einsum("bsd,de->bse", x, params["in_proj"].astype(compute_dtype))
+    z, xr, bmat, cmat, dt = jnp.split(
+        proj, [d_in, 2 * d_in, 2 * d_in + n, 2 * d_in + 2 * n], axis=-1)
+    conv_in = jnp.concatenate([xr, bmat, cmat], axis=-1)
+    if valid is not None:
+        # zero pads so conv windows see exactly the zero-init boundary
+        conv_in = conv_in * valid.astype(conv_in.dtype)[:, :, None]
+    conv_state = None if state is None else state["conv"]
+    conv_out, new_conv = _causal_conv(conv_in, params["conv_w"].astype(compute_dtype),
+                                      params["conv_b"].astype(compute_dtype), conv_state)
+    conv_out = jax.nn.silu(conv_out)
+    xr = conv_out[..., :d_in]
+    bmat = conv_out[..., d_in : d_in + n]
+    cmat = conv_out[..., d_in + n :]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    if valid is not None:
+        dt = dt * valid.astype(jnp.float32)[:, :, None]
+    xh = xr.reshape(bsz, seq, nh, p)
+
+    if state is None or seq > 1:
+        h0 = None if state is None else state["ssm"]
+        pad = (-seq) % s_cfg.chunk
+        if pad:
+            xh_p = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dt_p = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            b_p = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+            c_p = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+        else:
+            xh_p, dt_p, b_p, c_p = xh, dt, bmat, cmat
+        y, h_last = _ssd_chunked(xh_p, dt_p, params["A_log"], b_p, c_p, s_cfg.chunk, h0)
+        y = y[:, :seq]
+    else:
+        # recurrent single step
+        h = state["ssm"].astype(jnp.float32)             # (B,H,N,P)
+        a = -jnp.exp(params["A_log"].astype(jnp.float32))
+        da = jnp.exp(dt[:, 0] * a[None, :])              # (B,H)
+        upd = jnp.einsum("bh,bn,bhp->bhnp", dt[:, 0], bmat[:, 0].astype(jnp.float32),
+                         xh[:, 0].astype(jnp.float32))
+        h_last = h * da[:, :, None, None] + upd
+        y = jnp.einsum("bn,bhnp->bhp", cmat[:, 0].astype(jnp.float32), h_last)[:, None]
+
+    y = y + params["D"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(bsz, seq, d_in).astype(compute_dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"].astype(compute_dtype))
+    new_state = {"conv": new_conv.astype(jnp.float32), "ssm": h_last}
+    return out, new_state
+
+
+def mamba2_state_defs(cfg: ModelConfig, batch: int) -> dict:
+    s = cfg.ssm
+    d_in, nh, p, n = _mamba_dims(cfg)
+    return {
+        "conv": ((batch, s.conv_dim - 1, d_in + 2 * n), ("batch", None, "tp"), "float32"),
+        "ssm": ((batch, nh, n, p), ("batch", "tp", None, None), "float32"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# xLSTM — mLSTM (matrix memory, chunked parallel) and sLSTM (scan)
+# ---------------------------------------------------------------------------
+
+def _xlstm_dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nh = cfg.num_heads
+    p = d_in // nh
+    return d_in, nh, p
+
+
+def mlstm_defs(cfg: ModelConfig) -> ParamTree:
+    d = cfg.d_model
+    d_in, nh, p = _xlstm_dims(cfg)
+    return {
+        "w_up": ParamDef((d, 2 * d_in), ("fsdp", "tp")),
+        "w_q": ParamDef((d_in, d_in), ("fsdp", "tp")),
+        "w_k": ParamDef((d_in, d_in), ("fsdp", "tp")),
+        "w_v": ParamDef((d_in, d_in), ("fsdp", "tp")),
+        "w_if": ParamDef((d_in, 2 * nh), ("tp", None), scale=0.1),
+        "b_if": ParamDef((2 * nh,), (None,), init="zeros"),
+        "skip": ParamDef((d_in,), ("tp",), init="ones"),
+        "norm": ParamDef((d_in,), ("tp",), init="ones"),
+        "w_down": ParamDef((d_in, d), ("tp", "fsdp")),
+    }
+
+
+def _mlstm_chunked(q, k, v, ig, fg, chunk, state=None):
+    """Stabilized chunked mLSTM.
+
+    q,k,v: (B,S,H,P); ig/fg raw gate pre-activations (B,S,H).
+    Returns y (B,S,H,P), state dict {"C": (B,H,P,P), "n": (B,H,P), "m": (B,H)}.
+    """
+    b, s, h, p = q.shape
+    nc, c = s // chunk, chunk
+    f32 = jnp.float32
+    q, k, v = (t.astype(f32).reshape(b, nc, c, h, p) for t in (q, k, v))
+    logf = jax.nn.log_sigmoid(fg.astype(f32)).reshape(b, nc, c, h)
+    logi = ig.astype(f32).reshape(b, nc, c, h)
+    cf = jnp.cumsum(logf, axis=2)                       # inclusive
+    # intra-chunk log weights: D[i,j] = cf_i - cf_j + logi_j  (i >= j)
+    dmat = cf[:, :, :, None, :] - cf[:, :, None, :, :] + logi[:, :, None, :, :]
+    mask = jnp.tril(jnp.ones((c, c), bool))
+    dmat = jnp.where(mask[None, None, :, :, None], dmat, -jnp.inf)
+    # stabilizer per (b,k,i,h)
+    m_intra = jnp.max(dmat, axis=3)                      # (B,nc,c,H)
+    # inter-chunk carried state
+    if state is None:
+        c0 = jnp.zeros((b, h, p, p), f32)
+        n0 = jnp.zeros((b, h, p), f32)
+        m0 = jnp.full((b, h), -jnp.inf, f32)
+    else:
+        c0, n0, m0 = state["C"].astype(f32), state["n"].astype(f32), state["m"].astype(f32)
+
+    # per-chunk summaries for the recurrence
+    decay_to_end = cf[:, :, -1:, :] - cf + logi          # (B,nc,c,H) weight of j into end-state
+    m_loc = jnp.max(decay_to_end, axis=2)                # (B,nc,H)
+
+    def step(carry, inp):
+        c_prev, n_prev, m_prev = carry
+        kv_k, kn_k, dec_k, mloc_k = inp
+        # dec_k: (B,H) total log decay of chunk; mloc_k: (B,H) local max
+        m_new = jnp.maximum(m_prev + dec_k, mloc_k)
+        scale_old = jnp.exp(m_prev + dec_k - m_new)[:, :, None]
+        scale_loc = jnp.exp(mloc_k - m_new)[:, :, None]
+        c_new = c_prev * scale_old[..., None] + kv_k * scale_loc[..., None]
+        n_new = n_prev * scale_old + kn_k * scale_loc
+        return (c_new, n_new, m_new), (c_prev, n_prev, m_prev)
+
+    w_end = jnp.exp(decay_to_end - m_loc[:, :, None, :])             # (B,nc,c,H)
+    kv = jnp.einsum("bkch,bkchp,bkchq->bkhpq", w_end, k, v)          # (B,nc,H,P,P)
+    kn = jnp.einsum("bkch,bkchp->bkhp", w_end, k)
+    dec = cf[:, :, -1, :]
+    (c_l, n_l, m_l), (c_prevs, n_prevs, m_prevs) = jax.lax.scan(
+        step, (c0, n0, m0),
+        (jnp.moveaxis(kv, 1, 0), jnp.moveaxis(kn, 1, 0),
+         jnp.moveaxis(dec, 1, 0), jnp.moveaxis(m_loc, 1, 0)))
+    c_prevs = jnp.moveaxis(c_prevs, 0, 1)                # (B,nc,H,P,P)
+    n_prevs = jnp.moveaxis(n_prevs, 0, 1)
+    m_prevs = jnp.moveaxis(m_prevs, 0, 1)                # (B,nc,H)
+
+    # combine intra + inter with joint stabilizer
+    m_inter = m_prevs[:, :, None, :] + cf                # (B,nc,c,H)
+    m_tot = jnp.maximum(jnp.maximum(m_intra, m_inter), -1e30)
+    w_intra = jnp.exp(dmat - m_tot[:, :, :, None, :])    # (B,nc,c,c,H)
+    w_inter = jnp.exp(m_inter - m_tot)                   # (B,nc,c,H)
+    qs = q / math.sqrt(p)
+    scores = jnp.einsum("bkihp,bkjhp->bkijh", qs, k)
+    y_intra = jnp.einsum("bkijh,bkijh,bkjhq->bkihq", scores, w_intra, v)
+    den_intra = jnp.einsum("bkijh,bkijh->bkih", scores, w_intra)
+    y_inter = jnp.einsum("bkchp,bkhpq,bkch->bkchq", qs, c_prevs, w_inter)
+    den_inter = jnp.einsum("bkchp,bkhp,bkch->bkch", qs, n_prevs, w_inter)
+    den = jnp.maximum(jnp.abs(den_intra + den_inter), jnp.exp(-m_tot))
+    y = (y_intra + y_inter) / den[..., None]
+    y = y.reshape(b, s, h, p)
+    return y, {"C": c_l, "n": n_l, "m": m_l}
+
+
+def _mlstm_step(q, k, v, ig, fg, state):
+    """Single-token stabilized mLSTM update. q,k,v: (B,H,P); ig/fg: (B,H)."""
+    f32 = jnp.float32
+    q, k, v = q.astype(f32), k.astype(f32), v.astype(f32)
+    p = q.shape[-1]
+    logf = jax.nn.log_sigmoid(fg.astype(f32))
+    logi = ig.astype(f32)
+    c_p, n_p, m_p = state["C"].astype(f32), state["n"].astype(f32), state["m"].astype(f32)
+    m_new = jnp.maximum(logf + m_p, logi)
+    sf = jnp.exp(logf + m_p - m_new)[..., None]
+    si = jnp.exp(logi - m_new)[..., None]
+    c_new = c_p * sf[..., None] + si[..., None] * (k[..., :, None] * v[..., None, :])
+    n_new = n_p * sf + si * k
+    qs = q / math.sqrt(p)
+    num = jnp.einsum("bhp,bhpq->bhq", qs, c_new)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhp,bhp->bh", qs, n_new)), jnp.exp(-m_new))
+    y = num / den[..., None]
+    return y, {"C": c_new, "n": n_new, "m": m_new}
+
+
+def mlstm_forward(params, x, cfg: ModelConfig, state=None, compute_dtype=jnp.bfloat16,
+                  valid=None):
+    """mLSTM block. x: (B,S,d). valid: (B,S) bool — pads are identity."""
+    d_in, nh, p = _xlstm_dims(cfg)
+    b, s, _ = x.shape
+    up = jnp.einsum("bsd,de->bse", x, params["w_up"].astype(compute_dtype))
+    xm, z = jnp.split(up, 2, axis=-1)
+    q = jnp.einsum("bse,ef->bsf", xm, params["w_q"].astype(compute_dtype)).reshape(b, s, nh, p)
+    k = jnp.einsum("bse,ef->bsf", xm, params["w_k"].astype(compute_dtype)).reshape(b, s, nh, p)
+    v = jnp.einsum("bse,ef->bsf", xm, params["w_v"].astype(compute_dtype)).reshape(b, s, nh, p)
+    gates = jnp.einsum("bse,eg->bsg", xm, params["w_if"].astype(compute_dtype))
+    gates = gates.astype(jnp.float32) + params["b_if"].astype(jnp.float32)
+    ig, fg = gates[..., :nh], gates[..., nh:]
+    if valid is not None:
+        vmask = valid.astype(jnp.float32)[:, :, None]
+        ig = jnp.where(vmask > 0, ig, -1e30)     # no input at pads
+        fg = jnp.where(vmask > 0, fg, 30.0)      # no decay at pads
+
+    if s == 1 and state is not None:
+        y, new_state = _mlstm_step(q[:, 0], k[:, 0], v[:, 0], ig[:, 0], fg[:, 0], state)
+        y = y[:, None]
+    else:
+        chunk = min(cfg.ssm.chunk if cfg.ssm else 256, s)
+        pad = (-s) % chunk
+        if pad:
+            q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            # pads: i -> 0 (no input), f -> 1 (no decay of carried state)
+            ig = jnp.pad(ig, ((0, 0), (0, pad), (0, 0)), constant_values=-1e30)
+            fg = jnp.pad(fg, ((0, 0), (0, pad), (0, 0)), constant_values=30.0)
+        y, new_state = _mlstm_chunked(q, k, v, ig, fg, chunk, state)
+        y = y[:, :s]
+    y = y.reshape(b, s, d_in).astype(compute_dtype)
+    y = y + params["skip"].astype(compute_dtype)[None, None, :] * xm
+    y = rms_norm(y, params["norm"], cfg.norm_eps)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, params["w_down"].astype(compute_dtype))
+    return out, new_state
+
+
+def mlstm_state_defs(cfg: ModelConfig, batch: int) -> dict:
+    _, nh, p = _xlstm_dims(cfg)
+    return {
+        "C": ((batch, nh, p, p), ("batch", None, "tp", None), "float32"),
+        "n": ((batch, nh, p), ("batch", None, "tp"), "float32"),
+        "m": ((batch, nh), ("batch", None), "float32"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM — scalar-memory recurrent block with exponential gating
+# ---------------------------------------------------------------------------
+
+def slstm_defs(cfg: ModelConfig) -> ParamTree:
+    d = cfg.d_model
+    nh = cfg.num_heads
+    p = d // nh
+    return {
+        # tp on head_dim (always divisible), not on the small head count
+        "w_in": ParamDef((d, 4, nh, p), ("fsdp", None, None, "tp")),
+        "r": ParamDef((nh, p, 4, p), (None, "tp", None, None), scale=0.5),
+        "b": ParamDef((4, nh, p), (None, None, "tp"), init="zeros"),
+        "norm": ParamDef((d,), (None,), init="ones"),
+        "w_out": ParamDef((d, d), ("fsdp", "tp")),
+    }
+
+
+def slstm_forward(params, x, cfg: ModelConfig, state=None, compute_dtype=jnp.bfloat16,
+                  valid=None):
+    """sLSTM block, sequential scan over time. x: (B,S,d)."""
+    d = cfg.d_model
+    nh = cfg.num_heads
+    p = d // nh
+    b, s, _ = x.shape
+    f32 = jnp.float32
+    wx = jnp.einsum("bsd,dghp->bsghp", x, params["w_in"].astype(compute_dtype)).astype(f32)
+    wx = wx + params["b"].astype(f32)[None, None]
+    r = params["r"].astype(f32)
+    valid_t = (jnp.ones((b, s), bool) if valid is None else valid.astype(bool))
+
+    if state is None:
+        h0 = jnp.zeros((b, nh, p), f32)
+        c0 = jnp.zeros((b, nh, p), f32)
+        n0 = jnp.ones((b, nh, p), f32)
+        m0 = jnp.zeros((b, nh, p), f32)
+    else:
+        h0, c0, n0, m0 = (state[k].astype(f32) for k in ("h", "c", "n", "m"))
+
+    def step(carry, inp):
+        wx_t, v_t = inp
+        h, c, n, m = carry
+        rec = jnp.einsum("bhp,hpgq->bghq", h, r)
+        g = wx_t + rec                                    # (B,4,H,P)
+        zt = jnp.tanh(g[:, 0])
+        it = g[:, 1]
+        ft = g[:, 2]
+        ot = jax.nn.sigmoid(g[:, 3])
+        logf = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(logf + m, it)
+        i_s = jnp.exp(it - m_new)
+        f_s = jnp.exp(logf + m - m_new)
+        c_new = f_s * c + i_s * zt
+        n_new = jnp.maximum(f_s * n + i_s, 1e-6)
+        h_new = ot * c_new / n_new
+        vm = v_t[:, None, None]                           # (B,1,1) pad carry-through
+        out = (jnp.where(vm, h_new, h), jnp.where(vm, c_new, c),
+               jnp.where(vm, n_new, n), jnp.where(vm, m_new, m))
+        return out, out[0]
+
+    (h_l, c_l, n_l, m_l), hs = jax.lax.scan(
+        step, (h0, c0, n0, m0),
+        (jnp.moveaxis(wx, 1, 0), jnp.moveaxis(valid_t, 1, 0)))
+    y = jnp.moveaxis(hs, 0, 1).reshape(b, s, d).astype(compute_dtype)
+    y = rms_norm(y, params["norm"], cfg.norm_eps)
+    out = jnp.einsum("bsd,de->bse", y, params["w_out"].astype(compute_dtype))
+    new_state = {"h": h_l, "c": c_l, "n": n_l, "m": m_l}
+    return out, new_state
+
+
+def slstm_state_defs(cfg: ModelConfig, batch: int) -> dict:
+    nh = cfg.num_heads
+    p = cfg.d_model // nh
+    sd = ((batch, nh, p), ("batch", None, "tp"), "float32")
+    return {"h": sd, "c": sd, "n": sd, "m": sd}

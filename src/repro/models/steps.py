@@ -1,0 +1,135 @@
+"""Step functions: loss / train_step / prefill_step / decode_step.
+
+These are the programs lowered by the dry-run and launched by the trainers.
+They are pure functions of (params, opt_state, batch) so pjit handles all
+distribution via the spec trees from ``transformer``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig, TrainConfig
+from repro.models import transformer
+from repro.optim import adamw
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Token-mean CE. logits: (B,S,V) f32, labels: (B,S) int32 (-1 = pad)."""
+    mask = labels >= 0
+    safe = jnp.maximum(labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = (logz - ll) * mask
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1)
+
+
+def loss_fn(params, batch, cfg: ModelConfig, *, use_ep=False, mesh=None,
+            sp_constraint=None):
+    logits, _, aux = transformer.forward(
+        params, batch["tokens"], cfg,
+        memory=batch.get("memory"), use_ep=use_ep, mesh=mesh,
+        sp_constraint=sp_constraint)
+    ce = cross_entropy(logits, batch["labels"])
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, *, use_ep=False,
+                    mesh=None, sp_constraint=None, donate=True):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    Supports gradient accumulation (tcfg.microbatch) and gradient compression
+    of the cross-shard payload (tcfg.grad_compression) — with pjit, gradients
+    are reduced automatically; compression is applied pre-update so the
+    mean-reduce payload is the compressed dtype.
+    """
+    lr_fn = adamw.cosine_schedule(tcfg)
+    bf_grads = tcfg.grads_dtype == "bfloat16"
+
+    def fwd(params, batch):
+        return loss_fn(params, batch, cfg, use_ep=use_ep, mesh=mesh,
+                       sp_constraint=sp_constraint)
+
+    def grad_fn(params, batch):
+        """value_and_grad; with grads_dtype=bfloat16 the differentiated tree
+        is a bf16 copy so cross-shard cotangent reductions move bf16."""
+        if not bf_grads:
+            return jax.value_and_grad(fwd, has_aux=True)(params, batch)
+        cast = jax.tree.map(
+            lambda p: p.astype(jnp.bfloat16)
+            if p.ndim >= 2 and p.dtype == jnp.float32 else p, params)
+        out, grads = jax.value_and_grad(fwd, has_aux=True)(cast, batch)
+        return out, grads
+
+    def train_step(params, opt_state, batch):
+        if tcfg.microbatch and tcfg.microbatch < batch["tokens"].shape[0]:
+            nmb = batch["tokens"].shape[0] // tcfg.microbatch
+
+            def mb(i):
+                sl = jax.tree.map(
+                    lambda x: jax.lax.dynamic_slice_in_dim(
+                        x, i * tcfg.microbatch, tcfg.microbatch, 0), batch)
+                return grad_fn(params, sl)
+
+            def body(carry, i):
+                (loss_a, met_a), g_a = carry
+                (loss, met), g = mb(i)
+                g_sum = jax.tree.map(jnp.add, g_a, g)
+                return ((loss_a + loss, jax.tree.map(jnp.add, met_a, met)), g_sum), None
+
+            (loss0, met0), g0 = mb(0)
+            ((loss_t, met_t), g_t), _ = jax.lax.scan(
+                body, ((loss0, met0), g0), jnp.arange(1, nmb))
+            loss = loss_t / nmb
+            metrics = jax.tree.map(lambda x: x / nmb, met_t)
+            grads = jax.tree.map(lambda g: g / nmb, g_t)
+        else:
+            (loss, metrics), grads = grad_fn(params, batch)
+
+        if tcfg.grad_compression != "none":
+            payload, deq = adamw.compress_grads(grads, tcfg.grad_compression)
+            grads = deq(payload)
+        params2, opt2, opt_metrics = adamw.adamw_update(params, grads, opt_state, tcfg, lr_fn)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return params2, opt2, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, capacity: int, *, use_ep=False, mesh=None,
+                      sp_constraint=None):
+    """prefill_step(params, tokens[, memory]) -> (state, last_logits)."""
+
+    def prefill_step(params, tokens, memory=None, valid_from=None, positions=None):
+        b = tokens.shape[0]
+        state = transformer.init_state(cfg, b, capacity)
+        logits, new_state, _ = transformer.forward(
+            params, tokens, cfg, state=state, memory=memory,
+            use_ep=use_ep, mesh=mesh, sp_constraint=sp_constraint,
+            valid_from=valid_from, positions=positions)
+        return new_state, logits[:, -1]
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, *, use_ep=False, mesh=None):
+    """decode_step(params, state, token, pos) -> (state, logits).
+
+    token: (B,1) int32 or (B,1,F) frontend embeds; pos: (B,1) positions.
+    """
+
+    def decode_step(params, state, token, pos, valid_from=None):
+        logits, new_state, _ = transformer.forward(
+            params, token, cfg, positions=pos, state=state,
+            use_ep=use_ep, mesh=mesh, valid_from=valid_from)
+        return new_state, logits[:, -1]
+
+    return decode_step
+
+
+def greedy_sample(logits: jnp.ndarray) -> jnp.ndarray:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)

@@ -1,0 +1,389 @@
+"""Unified causal LM covering all assigned architectures.
+
+The layer stack is decomposed into *segments*: a prefix of ``num_layers %
+period`` unrolled layers followed by ``num_layers // period`` scanned
+repetitions of the block-pattern period.  Scanning keeps HLO size and compile
+time bounded for 60-100 layer models; remat is applied per scanned period.
+
+Blocks are dispatched on ``BlockKind``; each block owns its params subtree,
+optional recurrent/KV state, and an aux-loss scalar (MoE).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import BlockKind, FFNKind, ModelConfig
+from repro.distributed.mesh import AxisEnv
+from repro.models import attention as attn
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import (
+    ParamDef, ParamTree, abstract_tree, count_tree, dense_ffn, dense_ffn_defs,
+    embedding_defs, init_tree, rms_norm, softcap, spec_tree, stack_defs,
+)
+
+
+# ---------------------------------------------------------------------------
+# single block
+# ---------------------------------------------------------------------------
+
+def block_defs(cfg: ModelConfig, kind: str, ffn: str) -> ParamTree:
+    d = cfg.d_model
+    defs: ParamTree = {"ln1": ParamDef((d,), (None,), init="ones")}
+    if kind == BlockKind.ATTN.value:
+        defs["attn"] = attn.gqa_defs(cfg)
+    elif kind == BlockKind.MLA.value:
+        defs["attn"] = attn.mla_defs(cfg)
+    elif kind == BlockKind.CROSS_ATTN.value:
+        defs["attn"] = attn.cross_attn_defs(cfg)
+    elif kind == BlockKind.MAMBA2.value:
+        defs["mixer"] = ssm_lib.mamba2_defs(cfg)
+    elif kind == BlockKind.SLSTM.value:
+        defs["mixer"] = ssm_lib.slstm_defs(cfg)
+    elif kind == BlockKind.MLSTM.value:
+        defs["mixer"] = ssm_lib.mlstm_defs(cfg)
+    else:
+        raise ValueError(kind)
+    if ffn == FFNKind.DENSE.value and cfg.d_ff > 0:
+        defs["ln2"] = ParamDef((d,), (None,), init="ones")
+        defs["ffn"] = dense_ffn_defs(d, cfg.d_ff)
+    elif ffn == FFNKind.MOE.value:
+        defs["ln2"] = ParamDef((d,), (None,), init="ones")
+        defs["ffn"] = moe_lib.moe_defs(cfg)
+    return defs
+
+
+def block_state_defs(cfg: ModelConfig, kind: str, batch: int, capacity: int) -> dict:
+    if kind == BlockKind.ATTN.value:
+        return attn.gqa_cache_defs(cfg, batch, capacity)
+    if kind == BlockKind.MLA.value:
+        return attn.mla_cache_defs(cfg, batch, capacity)
+    if kind == BlockKind.CROSS_ATTN.value:
+        return {}
+    if kind == BlockKind.MAMBA2.value:
+        return ssm_lib.mamba2_state_defs(cfg, batch)
+    if kind == BlockKind.SLSTM.value:
+        return ssm_lib.slstm_state_defs(cfg, batch)
+    if kind == BlockKind.MLSTM.value:
+        return ssm_lib.mlstm_state_defs(cfg, batch)
+    raise ValueError(kind)
+
+
+def block_forward(
+    params: ParamTree,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    cfg: ModelConfig,
+    kind: str,
+    ffn: str,
+    state: Optional[dict],
+    memory: Optional[jnp.ndarray],
+    compute_dtype,
+    use_ep: bool,
+    mesh=None,
+    env=None,
+    valid_from=None,
+    valid=None,
+):
+    """Returns (x_out, new_state, aux_loss)."""
+    h = rms_norm(x, params["ln1"], cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    new_state = state
+    if kind == BlockKind.ATTN.value:
+        h, new_state = attn.gqa_attention(params["attn"], h, positions, cfg, state,
+                                          compute_dtype, valid_from=valid_from)
+    elif kind == BlockKind.MLA.value:
+        h, new_state = attn.mla_attention(params["attn"], h, positions, cfg, state,
+                                          compute_dtype, valid_from=valid_from)
+    elif kind == BlockKind.CROSS_ATTN.value:
+        mem = memory
+        if mem is None:
+            mem = jnp.zeros((x.shape[0], 1, cfg.d_model), x.dtype)
+        h = attn.cross_attention(params["attn"], h, mem, cfg, compute_dtype)
+    elif kind == BlockKind.MAMBA2.value:
+        h, new_state = ssm_lib.mamba2_forward(params["mixer"], h, cfg, state,
+                                              compute_dtype, valid=valid)
+    elif kind == BlockKind.SLSTM.value:
+        h, new_state = ssm_lib.slstm_forward(params["mixer"], h, cfg, state,
+                                             compute_dtype, valid=valid)
+    elif kind == BlockKind.MLSTM.value:
+        h, new_state = ssm_lib.mlstm_forward(params["mixer"], h, cfg, state,
+                                             compute_dtype, valid=valid)
+    x = x + h
+    if "ffn" in params:
+        h = rms_norm(x, params["ln2"], cfg.norm_eps)
+        if ffn == FFNKind.MOE.value:
+            if use_ep and mesh is not None:
+                h, aux = moe_lib.moe_block_sharded(params["ffn"], h, cfg, mesh, env,
+                                                   compute_dtype)
+            else:
+                h, aux = moe_lib.moe_ffn_dense(params["ffn"], h, cfg, compute_dtype)
+        else:
+            h = dense_ffn(params["ffn"], h, compute_dtype)
+        x = x + h
+    return x, new_state, aux
+
+
+# ---------------------------------------------------------------------------
+# segments: prefix (unrolled) + scanned periods
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Segments:
+    prefix: tuple          # tuple[(kind, ffn)] unrolled layers
+    period: tuple          # tuple[(kind, ffn)] one scanned period
+    n_periods: int
+
+
+def plan_segments(cfg: ModelConfig) -> Segments:
+    pattern = cfg.pattern
+    ffns = [cfg._layer_ffn(k) for k in pattern]
+    if cfg.moe is not None:
+        step = cfg.moe.moe_layer_step
+        for i in range(len(ffns)):
+            if ffns[i] == FFNKind.MOE.value and (
+                    i < cfg.moe.first_dense_layers or i % step != step - 1):
+                ffns[i] = FFNKind.DENSE.value
+    layers = tuple(zip(pattern, ffns))
+    if not cfg.scan_layers:
+        return Segments(prefix=layers, period=(), n_periods=0)
+    p = len(cfg.block_pattern)
+    if cfg.cross_attn_every:
+        p = _lcm(p, cfg.cross_attn_every)
+    if cfg.moe is not None and cfg.moe.moe_layer_step > 1:
+        p = _lcm(p, cfg.moe.moe_layer_step)
+    # find the longest suffix that is periodic with period p
+    n = len(layers)
+    n_periods = 0
+    while n_periods < n // p:
+        cand = n - (n_periods + 1) * p
+        if cand < 0:
+            break
+        seg = layers[cand : cand + p]
+        ok = all(layers[cand + j * p : cand + (j + 1) * p] == seg
+                 for j in range(n_periods + 1))
+        if not ok:
+            break
+        n_periods += 1
+    if n_periods <= 1:
+        return Segments(prefix=layers, period=(), n_periods=0)
+    prefix_len = n - n_periods * p
+    return Segments(prefix=layers[:prefix_len], period=layers[prefix_len : prefix_len + p],
+                    n_periods=n_periods)
+
+
+def _lcm(a: int, b: int) -> int:
+    import math
+    return a * b // math.gcd(a, b)
+
+
+# ---------------------------------------------------------------------------
+# model
+# ---------------------------------------------------------------------------
+
+def model_defs(cfg: ModelConfig) -> ParamTree:
+    segs = plan_segments(cfg)
+    defs: ParamTree = {
+        "embed": embedding_defs(cfg.vocab_size, cfg.d_model),
+        "ln_f": ParamDef((cfg.d_model,), (None,), init="ones"),
+        "prefix": {str(i): block_defs(cfg, k, f) for i, (k, f) in enumerate(segs.prefix)},
+    }
+    if segs.n_periods:
+        period_defs = {str(j): block_defs(cfg, k, f) for j, (k, f) in enumerate(segs.period)}
+        defs["scanned"] = stack_defs(period_defs, segs.n_periods)
+    if not cfg.tie_embeddings:
+        defs["unembed"] = ParamDef((cfg.d_model, cfg.vocab_size), ("fsdp", "tp"), scale=1.0)
+    if cfg.frontend_embed_dim:
+        defs["frontend_proj"] = ParamDef(
+            (cfg.frontend_embed_dim, cfg.d_model), (None, "fsdp"))
+    if cfg.cross_attn_every > 0 and cfg.frontend_embed_dim:
+        defs["memory_proj"] = ParamDef(
+            (cfg.frontend_embed_dim, cfg.d_model), (None, "fsdp"))
+    return defs
+
+
+def init_params(cfg: ModelConfig, key) -> ParamTree:
+    return init_tree(model_defs(cfg), key)
+
+
+def param_specs(cfg: ModelConfig, env: AxisEnv) -> ParamTree:
+    return spec_tree(model_defs(cfg), env)
+
+
+def abstract_params(cfg: ModelConfig) -> ParamTree:
+    return abstract_tree(model_defs(cfg))
+
+
+def count_params(cfg: ModelConfig) -> int:
+    return count_tree(model_defs(cfg))
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Params touched per token (MoE: top_k routed + shared experts only)."""
+    total = count_params(cfg)
+    if cfg.moe is None:
+        return total
+    segs = plan_segments(cfg)
+    layers = list(segs.prefix) + list(segs.period) * segs.n_periods
+    n_moe = sum(1 for _, f in layers if f == FFNKind.MOE.value)
+    mo = cfg.moe
+    inactive = (mo.num_experts - mo.top_k) * 3 * cfg.d_model * mo.expert_d_ff
+    return total - n_moe * inactive
+
+
+def _leaf_sd(x):
+    return (isinstance(x, tuple) and len(x) == 3 and isinstance(x[0], tuple)
+            and isinstance(x[2], str))
+
+
+def state_defs(cfg: ModelConfig, batch: int, capacity: int) -> dict:
+    """Per-layer decode state (KV cache / SSM state): (shape, logical, dtype)."""
+    segs = plan_segments(cfg)
+    out = {"prefix": {str(i): block_state_defs(cfg, k, batch, capacity)
+                      for i, (k, _) in enumerate(segs.prefix)}}
+    if segs.n_periods:
+        period = {str(j): block_state_defs(cfg, k, batch, capacity)
+                  for j, (k, _) in enumerate(segs.period)}
+        out["scanned"] = jax.tree.map(
+            lambda sd: ((segs.n_periods,) + sd[0], (None,) + tuple(sd[1]), sd[2]),
+            period, is_leaf=_leaf_sd)
+    else:
+        out["scanned"] = None
+    return out
+
+
+def init_state(cfg: ModelConfig, batch: int, capacity: int) -> dict:
+    return jax.tree.map(lambda sd: jnp.zeros(sd[0], sd[2]),
+                        state_defs(cfg, batch, capacity), is_leaf=_leaf_sd)
+
+
+def state_specs(cfg: ModelConfig, env: AxisEnv, batch: int, capacity: int,
+                batch_logical: Optional[str] = "batch") -> dict:
+    def mk(sd):
+        logical = tuple(batch_logical if l == "batch" else l for l in sd[1])
+        return env.resolve(logical)
+    return jax.tree.map(mk, state_defs(cfg, batch, capacity), is_leaf=_leaf_sd)
+
+
+def abstract_state(cfg: ModelConfig, batch: int, capacity: int) -> dict:
+    return jax.tree.map(lambda sd: jax.ShapeDtypeStruct(sd[0], sd[2]),
+                        state_defs(cfg, batch, capacity), is_leaf=_leaf_sd)
+
+
+def forward(
+    params: ParamTree,
+    tokens: jnp.ndarray,            # (B, S) int32 — or (B, S, F) frontend embeds
+    cfg: ModelConfig,
+    *,
+    positions: Optional[jnp.ndarray] = None,
+    state: Optional[dict] = None,
+    memory: Optional[jnp.ndarray] = None,
+    use_ep: bool = False,
+    mesh=None,
+    sp_constraint: Optional[Callable] = None,
+    valid_from=None,
+):
+    """Returns (logits, new_state, aux_loss).
+
+    valid_from: optional (B,) int32 — positions below it are left-pads
+    (serving batches); masked in attention and identity in SSM recurrences.
+    """
+    compute_dtype = jnp.dtype(cfg.dtype)
+    if cfg.param_cast == "once":
+        # cast before the scan: FSDP all-gathers then move compute-dtype
+        # bytes instead of f32 (grad flows back through the cast).
+        params = jax.tree.map(
+            lambda p: p.astype(compute_dtype)
+            if p.ndim >= 2 and p.dtype == jnp.float32 else p, params)
+    segs = plan_segments(cfg)
+    if tokens.ndim == 3:
+        x = jnp.einsum("bsf,fd->bsd", tokens.astype(compute_dtype),
+                       params["frontend_proj"].astype(compute_dtype))
+    else:
+        x = params["embed"]["embedding"].astype(compute_dtype)[tokens]
+    if memory is not None and "memory_proj" in params:
+        memory = jnp.einsum("bmf,fd->bmd", memory.astype(compute_dtype),
+                            params["memory_proj"].astype(compute_dtype))
+    b, s = x.shape[:2]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    if sp_constraint is not None:
+        x = sp_constraint(x)
+    aux_total = jnp.zeros((), jnp.float32)
+    new_state = {"prefix": {}, "scanned": None} if state is not None else None
+
+    env = AxisEnv.from_mesh(mesh) if mesh is not None else None
+    valid = None
+    if valid_from is not None and s > 1:
+        # physical prefill positions (cache slots 0..s-1); decode steps (s=1)
+        # are always real tokens — `positions` may be logical (RoPE) ones.
+        valid = jnp.arange(s)[None, :] >= valid_from[:, None]
+
+    # prefix (unrolled; remat per block to match the scanned segments)
+    for i, (kind, ffn) in enumerate(segs.prefix):
+        st = state["prefix"][str(i)] if state is not None else None
+
+        def blk(pp, xx, ss, _kind=kind, _ffn=ffn):
+            return block_forward(pp, xx, positions, cfg, _kind, _ffn, ss,
+                                 memory, compute_dtype, use_ep, mesh, env,
+                                 valid_from, valid)
+
+        if cfg.remat:
+            policy = (jax.checkpoint_policies.nothing_saveable
+                      if cfg.remat_policy == "nothing_saveable"
+                      else jax.checkpoint_policies.checkpoint_dots)
+            blk = jax.checkpoint(blk, policy=policy, prevent_cse=False)
+        x, st2, aux = blk(params["prefix"][str(i)], x, st)
+        if sp_constraint is not None:
+            x = sp_constraint(x)
+        aux_total = aux_total + aux
+        if state is not None:
+            new_state["prefix"][str(i)] = st2
+
+    # scanned periods
+    if segs.n_periods:
+        def period_fn(carry, layer_in):
+            x, positions = carry
+            layer_params, layer_state = layer_in
+            new_layer_state = {} if layer_state is not None else None
+            aux_p = jnp.zeros((), jnp.float32)
+            for j, (kind, ffn) in enumerate(segs.period):
+                st = layer_state[str(j)] if layer_state is not None else None
+                x, st2, aux = block_forward(layer_params[str(j)], x, positions, cfg,
+                                            kind, ffn, st, memory, compute_dtype, use_ep,
+                                            mesh, env, valid_from, valid)
+                if sp_constraint is not None:
+                    x = sp_constraint(x)
+                aux_p = aux_p + aux
+                if layer_state is not None:
+                    new_layer_state[str(j)] = st2
+            return (x, positions), (new_layer_state, aux_p)
+
+        if cfg.remat:
+            policy = (jax.checkpoint_policies.nothing_saveable
+                      if cfg.remat_policy == "nothing_saveable"
+                      else jax.checkpoint_policies.checkpoint_dots)
+            period_fn = jax.checkpoint(period_fn, policy=policy, prevent_cse=False)
+        scan_state = state["scanned"] if state is not None else None
+        (x, _), (scan_new_state, aux_ps) = jax.lax.scan(
+            period_fn, (x, positions),
+            (params["scanned"], scan_state),
+        )
+        aux_total = aux_total + jnp.sum(aux_ps)
+        if state is not None:
+            new_state["scanned"] = scan_new_state
+
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        w_out = params["embed"]["embedding"].astype(compute_dtype).T
+    else:
+        w_out = params["unembed"].astype(compute_dtype)
+    logits = jnp.einsum("bsd,dv->bsv", x, w_out)
+    logits = softcap(logits.astype(jnp.float32), cfg.logits_softcap)
+    return logits, new_state, aux_total

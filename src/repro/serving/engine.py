@@ -1,0 +1,94 @@
+"""Batched serving engine: wave-scheduled continuous batching.
+
+Requests are bucketed into *waves* of up to ``batch_slots``; each wave is
+left-padded to its longest prompt (pad positions are masked end-to-end via
+``valid_from`` — attention masks them, SSM recurrences treat them as
+identity), prefilled in one batched call, then decoded in lockstep with
+greedy sampling.  A slot whose request finishes keeps decoding garbage until
+the wave drains (its output is truncated) — the fixed-shape trade-off that
+keeps every step a single compiled program.
+
+This engine backs the serve-mode examples and ``ServingOracle`` — the
+real-LLM backend for FDJ's join/extraction calls.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import ModelConfig
+from repro.models import steps, transformer
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray               # (len,) int32
+    max_new_tokens: int = 16
+    eos_id: int = -1                 # -1: never
+    out_tokens: list = dataclasses.field(default_factory=list)
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, *, batch_slots: int = 8,
+                 capacity: int = 512):
+        self.cfg = cfg
+        self.params = params
+        self.b = batch_slots
+        self.capacity = capacity
+        self._prefill = jax.jit(steps.make_prefill_step(cfg, capacity))
+        self._decode = jax.jit(steps.make_decode_step(cfg))
+        self.steps_executed = 0
+
+    def _run_wave(self, wave: List[Request]) -> None:
+        b = self.b
+        lens = [len(r.prompt) for r in wave]
+        pmax = max(lens)
+        tokens = np.zeros((b, pmax), np.int32)
+        valid_from = np.full(b, pmax, np.int32)      # empty slots: all pad
+        for s, r in enumerate(wave):
+            tokens[s, pmax - lens[s]:] = r.prompt
+            valid_from[s] = pmax - lens[s]
+        # logical (RoPE) positions start at 0 for each request's first real
+        # token; cache masking stays on physical positions via valid_from.
+        logical = np.maximum(np.arange(pmax)[None, :] - valid_from[:, None], 0)
+        state, last_logits = self._prefill(
+            self.params, jnp.asarray(tokens), None, jnp.asarray(valid_from),
+            jnp.asarray(logical, np.int32))
+        last = np.asarray(steps.greedy_sample(last_logits))
+        for s, r in enumerate(wave):
+            r.out_tokens.append(int(last[s]))
+        pos = pmax
+        budget = max(r.max_new_tokens for r in wave) - 1
+        vf = jnp.asarray(valid_from)
+        for _ in range(max(budget, 0)):
+            if pos >= self.capacity:
+                break
+            tok = jnp.asarray(last, jnp.int32)[:, None]
+            posv = jnp.asarray(pos - valid_from, jnp.int32)[:, None]   # logical
+            state, logits = self._decode(self.params, state, tok, posv, vf)
+            last = np.asarray(steps.greedy_sample(logits))
+            self.steps_executed += 1
+            alive = False
+            for s, r in enumerate(wave):
+                if len(r.out_tokens) >= r.max_new_tokens:
+                    continue
+                if r.out_tokens and r.out_tokens[-1] == r.eos_id:
+                    continue
+                r.out_tokens.append(int(last[s]))
+                alive = True
+            pos += 1
+            if not alive:
+                break
+
+    def run(self, requests: Sequence[Request]) -> List[Request]:
+        """Processes all requests; returns them with ``out_tokens`` filled."""
+        reqs = sorted(requests, key=lambda r: len(r.prompt))  # length bucketing
+        for w0 in range(0, len(reqs), self.b):
+            wave = list(reqs[w0 : w0 + self.b])
+            self._run_wave(wave)
+        return list(requests)

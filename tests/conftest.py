@@ -1,0 +1,6 @@
+import os
+import sys
+
+# tests see the real (single) CPU device — the 512-device override is applied
+# only inside repro.launch.dryrun, per the assignment contract.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,157 @@
+"""FDJ core unit tests: cost-to-cover, scaffold search, thresholds,
+adj-target, BARGAIN primitives, end-to-end guarantees."""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import generation, scaffold as sl
+from repro.core.adj_target import adj_target, failure_curve
+from repro.core.bargain import (bargain_precision_subset,
+                                optimal_cascade_threshold,
+                                recall_guarded_threshold, supg_threshold)
+from repro.core.scaffold import Scaffold, get_logical_scaffold, min_fpr_thresholds
+
+
+def test_cost_to_cover_separable():
+    """A perfectly separating featurization gives cost-to-cover 0."""
+    rng = np.random.default_rng(0)
+    pos = rng.uniform(0.0, 0.2, size=50)
+    neg = rng.uniform(0.5, 1.0, size=200)
+    d = np.concatenate([pos, neg])[:, None]
+    labels = np.concatenate([np.ones(50, bool), np.zeros(200, bool)])
+    c = generation.cost_to_cover(d, labels)
+    assert c.max() == 0
+
+
+def test_cost_to_cover_counts_exact():
+    d = np.array([[0.5], [0.1], [0.3], [0.7]])      # pos at 0.5, negs 0.1/0.3/0.7
+    labels = np.array([True, False, False, False])
+    c = generation.cost_to_cover(d, labels)
+    assert c.tolist() == [2]                         # two negatives <= 0.5
+
+
+def test_min_fpr_1d_exact():
+    d = np.array([0.1, 0.2, 0.3, 0.15, 0.25, 0.9])
+    labels = np.array([True, True, True, False, False, False])
+    r = min_fpr_thresholds(d[:, None], labels, 1.0)       # keep all positives
+    assert r.feasible and r.theta[0] == pytest.approx(0.3)
+    assert r.fpr == pytest.approx(2 / 3)                  # 0.15, 0.25 admitted
+    r2 = min_fpr_thresholds(d[:, None], labels, 0.66)     # may drop one positive
+    # need = ceil(0.66*3) = 2 positives -> theta 0.2 admits neg 0.15 only
+    assert r2.feasible and r2.theta[0] == pytest.approx(0.2)
+    assert r2.fpr == pytest.approx(1 / 3)
+
+
+def test_min_fpr_multidim_greedy_feasibility():
+    rng = np.random.default_rng(1)
+    k = 400
+    labels = rng.random(k) < 0.25
+    cd = rng.uniform(0, 1, size=(k, 3))
+    cd[labels] *= 0.4                               # positives closer
+    for t in (0.8, 0.9, 0.95):
+        r = min_fpr_thresholds(cd, labels, t)
+        assert r.feasible
+        sel = np.all(cd <= r.theta[None, :], axis=1)
+        got = (sel & labels).sum() / labels.sum()
+        assert got >= t - 1e-9                       # observed recall met
+        assert r.fpr <= 1.0
+
+
+def test_scaffold_greedy_improves_and_respects_cap():
+    rng = np.random.default_rng(2)
+    k = 500
+    labels = rng.random(k) < 0.2
+    good = np.where(labels, rng.uniform(0, 0.2, k), rng.uniform(0, 1, k))
+    noise = rng.uniform(0, 1, size=(k, 3))
+    d = np.column_stack([good, noise])
+    sc = get_logical_scaffold(d, labels, 0.9, gamma=0.05, max_clauses=2)
+    assert 1 <= sc.n_clauses <= 2
+    assert 0 in sc.used_featurizations()            # the informative feature
+    cost = sl.scaffold_cost(d, labels, sc, 0.9)
+    assert cost < 1.0                               # better than admit-all
+
+
+def test_adj_target_monotone_and_bounds():
+    r1 = adj_target(200, 1, 0.9, 0.1, n_pairs=10**6, k_sample=20000,
+                    n_plus_hat=10000, n_trials=3000)
+    r3 = adj_target(200, 3, 0.9, 0.1, n_pairs=10**6, k_sample=20000,
+                    n_plus_hat=10000, n_trials=3000)
+    assert 0.9 < r1.t_prime <= r3.t_prime <= 1.0
+    # empirical failure on the worst-case dataset stays below delta3
+    tail = failure_curve(200, 1, 10000, 0.9, 3000, cache=False)
+    m = int(math.ceil(200 * r1.t_prime - 1e-9))
+    assert tail[m] <= r1.delta3
+
+
+def test_adj_target_r1_matches_classical_range():
+    """1-D case: T' should land in the classical ~T + 2-3 sigma band."""
+    res = adj_target(200, 1, 0.9, 0.1, n_pairs=10**6, k_sample=20000,
+                     n_plus_hat=10000, n_trials=5000)
+    sigma = math.sqrt(0.9 * 0.1 / 200)
+    assert 0.9 + sigma <= res.t_prime <= 0.9 + 5 * sigma
+
+
+def test_recall_guarded_threshold_meets_target():
+    rng = np.random.default_rng(3)
+    fails = 0
+    trials = 20
+    n_plus = 4000
+    for t in range(trials):
+        rr = np.random.default_rng(t)
+        # population: positives near 0, negatives uniform
+        pop_pos = rr.uniform(0, 0.6, n_plus)
+        k = 300
+        samp = rr.choice(n_plus, size=k, replace=False)
+        sd = pop_pos[samp]
+        labels = np.ones(k, bool)
+        cas = recall_guarded_threshold(sd, labels, 0.9, 0.1,
+                                       n_pairs=10**6, n_trials=3000)
+        true_recall = (pop_pos <= cas.tau).mean()
+        fails += true_recall < 0.9
+    assert fails / trials <= 0.2, f"failure rate {fails}/{trials}"
+
+
+def test_supg_fails_more_often_than_guarded():
+    n_plus, k, trials = 4000, 300, 30
+    fails_supg = 0
+    for t in range(trials):
+        rr = np.random.default_rng(100 + t)
+        pop_pos = rr.uniform(0, 0.6, n_plus)
+        sd = pop_pos[rr.choice(n_plus, size=k, replace=False)]
+        tau = supg_threshold(sd, np.ones(k, bool), 0.9)
+        fails_supg += (pop_pos <= tau).mean() < 0.9
+    assert fails_supg / trials > 0.25       # unadjusted: ~50% failures
+
+
+def test_optimal_cascade_is_tightest():
+    rng = np.random.default_rng(4)
+    d = rng.uniform(0, 1, 5000)
+    labels = rng.random(5000) < 0.3
+    d[labels] *= 0.5
+    tau = optimal_cascade_threshold(d, labels, 0.9)
+    rec = (d[labels] <= tau).mean()
+    assert rec >= 0.9
+    # one grid step tighter would violate the target
+    pos_sorted = np.sort(d[labels])
+    idx = np.searchsorted(pos_sorted, tau)
+    if idx >= 1:
+        assert (d[labels] <= pos_sorted[idx - 1]).mean() < 0.9 + 1e-9
+
+
+def test_bargain_precision_subset_sound():
+    rng = np.random.default_rng(5)
+    n = 2000
+    d = rng.uniform(0, 1, n)
+    truth = d + rng.normal(0, 0.1, n) < 0.4        # low distance => match
+    calls = {"n": 0}
+
+    def label_fn(idx):
+        calls["n"] += len(idx)
+        return truth[idx]
+
+    mask = bargain_precision_subset(d, label_fn, 0.9, 0.1, rng=rng)
+    if mask.any():
+        assert truth[mask].mean() >= 0.75           # high-precision subset
+        assert calls["n"] < n                       # cheaper than labeling all

@@ -1,0 +1,123 @@
+"""Per-kernel validation: shape/dtype sweeps, interpret-mode vs ref oracle."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.fused_cnf_join import ops as cnf_ops, ref as cnf_ref
+from repro.kernels.fused_cnf_join.kernel import SCAL, VEC, cnf_join_block
+from repro.kernels.threshold_sweep.ops import candidate_grid, sweep
+from repro.kernels.threshold_sweep.ref import threshold_sweep_ref
+
+
+def _mk_inputs(rng, fv, fs, nl, nr, d, dtype):
+    el = rng.normal(size=(fv, nl, d)).astype(dtype)
+    er = rng.normal(size=(fv, nr, d)).astype(dtype)
+    el /= np.linalg.norm(el, axis=-1, keepdims=True)
+    er /= np.linalg.norm(er, axis=-1, keepdims=True)
+    sl = rng.uniform(0, 1.5, size=(max(fs, 1), nl)).astype(dtype)
+    sr = rng.uniform(0, 1.5, size=(max(fs, 1), nr)).astype(dtype)
+    return el, er, sl, sr
+
+
+@pytest.mark.parametrize("nl,nr,d,tl,tr", [
+    (128, 128, 128, 64, 128),
+    (256, 512, 128, 128, 256),
+    (256, 256, 256, 256, 256),
+    (512, 256, 128, 128, 128),
+])
+def test_cnf_kernel_shapes(nl, nr, d, tl, tr):
+    rng = np.random.default_rng(nl + nr)
+    el, er, sl, sr = _mk_inputs(rng, 2, 1, nl, nr, d, np.float32)
+    clauses = (((VEC, 0), (SCAL, 0)), ((VEC, 1),))
+    thetas = (0.45, 0.52)
+    packed = cnf_join_block(jnp.asarray(el), jnp.asarray(er), jnp.asarray(sl),
+                            jnp.asarray(sr), clauses, thetas, tl=tl, tr=tr,
+                            interpret=True)
+    expect = cnf_ref.cnf_join_ref(jnp.asarray(el), jnp.asarray(er),
+                                  jnp.asarray(sl), jnp.asarray(sr),
+                                  clauses, thetas)
+    got = cnf_ref.unpack_mask(np.asarray(packed), nr)
+    assert np.array_equal(got, np.asarray(expect))
+
+
+@pytest.mark.parametrize("structure", [
+    (((VEC, 0),),),
+    (((SCAL, 0),),),
+    (((VEC, 0), (VEC, 1)), ((SCAL, 0),)),
+    (((VEC, 0),), ((VEC, 1),), ((SCAL, 0), (VEC, 0))),
+])
+def test_cnf_kernel_clause_structures(structure):
+    rng = np.random.default_rng(7)
+    el, er, sl, sr = _mk_inputs(rng, 2, 1, 128, 128, 128, np.float32)
+    thetas = tuple(0.3 + 0.1 * i for i in range(len(structure)))
+    packed = cnf_join_block(jnp.asarray(el), jnp.asarray(er), jnp.asarray(sl),
+                            jnp.asarray(sr), structure, thetas, tl=64, tr=64,
+                            interpret=True)
+    expect = cnf_ref.cnf_join_ref(jnp.asarray(el), jnp.asarray(er),
+                                  jnp.asarray(sl), jnp.asarray(sr),
+                                  structure, thetas)
+    assert np.array_equal(cnf_ref.unpack_mask(np.asarray(packed), 128),
+                          np.asarray(expect))
+
+
+def test_cnf_corpus_vs_numpy_join_path():
+    """evaluate_corpus (padding, packing, missing encoding) == numpy engine."""
+    from repro.core.costs import CostLedger
+    from repro.core.featurize import FeaturizationSpec
+    from repro.data.simulated_llm import SimulatedExtractor
+    from repro.data.synth import police_records
+
+    ds = police_records(n_incidents=40, reports_per_incident=2)
+    ext = SimulatedExtractor(ds)
+    led = CostLedger()
+    specs = [FeaturizationSpec("incident_date", "", "arithmetic", "llm", "incident_date"),
+             FeaturizationSpec("officer_names", "", "word_overlap", "llm", "officer_names"),
+             FeaturizationSpec("location", "", "semantic", "llm", "location")]
+    feats = ext.materialize(specs, led)
+    clauses = [[0], [1, 2]]
+    th = [0.02, 0.35]
+    got = set(cnf_ops.evaluate_corpus(feats, clauses, th, tl=32, tr=64))
+    il, jr = np.arange(ds.n_l), np.arange(ds.n_r)
+    ok = None
+    for ci, cl in enumerate(clauses):
+        cd = None
+        for f in cl:
+            d = feats[f].distance_block(il, jr)
+            cd = d if cd is None else np.minimum(cd, d)
+        pas = cd <= th[ci]
+        ok = pas if ok is None else ok & pas
+    want = set(zip(*[x.tolist() for x in np.nonzero(ok)]))
+    assert got == want
+
+
+@pytest.mark.parametrize("k,c,g", [(300, 1, 50), (700, 3, 200), (1024, 5, 64)])
+def test_threshold_sweep(k, c, g):
+    rng = np.random.default_rng(k)
+    cd = rng.uniform(0, 1, size=(k, c)).astype(np.float32)
+    labels = rng.random(k) < 0.3
+    th = rng.uniform(0, 1, size=(g, c)).astype(np.float32)
+    pos, sel = sweep(cd, labels, th, tg=64, tk=256)
+    expect = np.asarray(threshold_sweep_ref(
+        jnp.asarray(cd), jnp.asarray(labels.astype(np.float32)), jnp.asarray(th)))
+    np.testing.assert_allclose(pos, expect[:, 0], rtol=1e-6)
+    np.testing.assert_allclose(sel, expect[:, 1], rtol=1e-6)
+
+
+def test_threshold_sweep_grid_helper():
+    rng = np.random.default_rng(0)
+    pos = rng.uniform(0, 1, size=(40, 2)).astype(np.float32)
+    grid = candidate_grid(pos, max_per_dim=5)
+    assert grid.shape[1] == 2 and grid.shape[0] <= 25
+
+
+def test_missing_value_encoding_forces_max_distance():
+    """Augmented [e,m,1]/[e,1,m] rows make missing pairs distance 1."""
+    from repro.core.featurize import FeaturizationSpec, vectorize
+    spec = FeaturizationSpec("f", "", "word_overlap", "llm", "f")
+    fd = vectorize(spec, ["alpha beta", None, "gamma"], ["alpha beta", "delta", None])
+    d = fd.distance_block(np.arange(3), np.arange(3))
+    assert d[0, 0] < 0.01            # identical token sets
+    assert np.all(d[1, :] >= 0.999)  # missing left row
+    assert np.all(d[:, 2] >= 0.999)  # missing right row

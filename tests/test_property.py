@@ -1,0 +1,115 @@
+"""Property-based tests (hypothesis) on system invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import generation
+from repro.core.scaffold import Scaffold, min_fpr_thresholds
+from repro.kernels.fused_cnf_join import ref as cnf_ref
+from repro.kernels.fused_cnf_join.kernel import SCAL, VEC, cnf_join_block
+from repro.kernels.threshold_sweep.ops import sweep
+from repro.kernels.threshold_sweep.ref import threshold_sweep_ref
+
+
+dist_matrix = st.integers(2, 60).flatmap(
+    lambda k: st.integers(1, 4).flatmap(
+        lambda f: st.tuples(
+            st.just((k, f)),
+            st.lists(st.floats(0, 1, width=32), min_size=k * f, max_size=k * f),
+            st.lists(st.booleans(), min_size=k, max_size=k))))
+
+
+@given(dist_matrix)
+@settings(max_examples=40, deadline=None)
+def test_threshold_selection_meets_observed_recall(data):
+    (k, f), flat, labels = data
+    cd = np.asarray(flat, np.float32).reshape(k, f)
+    labels = np.asarray(labels, bool)
+    if labels.sum() == 0:
+        return
+    res = min_fpr_thresholds(cd, labels, 0.8)
+    if res.feasible:
+        sel = np.all(cd <= res.theta[None, :], axis=1)
+        recall = (sel & labels).sum() / labels.sum()
+        assert recall >= 0.8 - 1e-9
+        assert 0.0 <= res.fpr <= 1.0
+
+
+@given(dist_matrix)
+@settings(max_examples=30, deadline=None)
+def test_cost_to_cover_bounds(data):
+    (k, f), flat, labels = data
+    d = np.asarray(flat, np.float32).reshape(k, f)
+    labels = np.asarray(labels, bool)
+    n_pos, n_neg = int(labels.sum()), int((~labels).sum())
+    c = generation.cost_to_cover(d, labels)
+    assert c.shape == (n_pos,)
+    assert np.all(c >= 0) and np.all(c <= n_neg)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 3), st.integers(1, 3))
+@settings(max_examples=15, deadline=None)
+def test_cnf_kernel_equals_ref_random(seed, n_clauses, members):
+    rng = np.random.default_rng(seed)
+    fv, nl, nr, d = 2, 64, 64, 128
+    el = rng.normal(size=(fv, nl, d)).astype(np.float32)
+    er = rng.normal(size=(fv, nr, d)).astype(np.float32)
+    el /= np.linalg.norm(el, axis=-1, keepdims=True)
+    er /= np.linalg.norm(er, axis=-1, keepdims=True)
+    sl = rng.uniform(0, 1.2, size=(2, nl)).astype(np.float32)
+    sr = rng.uniform(0, 1.2, size=(2, nr)).astype(np.float32)
+    clauses = tuple(
+        tuple((VEC, int(rng.integers(0, fv))) if rng.random() < 0.5
+              else (SCAL, int(rng.integers(0, 2)))
+              for _ in range(members))
+        for _ in range(n_clauses))
+    thetas = tuple(float(rng.uniform(0.1, 0.9)) for _ in range(n_clauses))
+    packed = cnf_join_block(jnp.asarray(el), jnp.asarray(er), jnp.asarray(sl),
+                            jnp.asarray(sr), clauses, thetas, tl=32, tr=32,
+                            interpret=True)
+    expect = cnf_ref.cnf_join_ref(jnp.asarray(el), jnp.asarray(er),
+                                  jnp.asarray(sl), jnp.asarray(sr),
+                                  clauses, thetas)
+    assert np.array_equal(cnf_ref.unpack_mask(np.asarray(packed), nr),
+                          np.asarray(expect))
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_sweep_kernel_equals_ref_random(seed):
+    rng = np.random.default_rng(seed)
+    k = int(rng.integers(10, 400))
+    c = int(rng.integers(1, 5))
+    g = int(rng.integers(1, 100))
+    cd = rng.uniform(0, 1, size=(k, c)).astype(np.float32)
+    labels = rng.random(k) < 0.4
+    th = rng.uniform(0, 1, size=(g, c)).astype(np.float32)
+    pos, sel = sweep(cd, labels, th, tg=64, tk=128)
+    expect = np.asarray(threshold_sweep_ref(
+        jnp.asarray(cd), jnp.asarray(labels.astype(np.float32)), jnp.asarray(th)))
+    np.testing.assert_allclose(pos, expect[:, 0], atol=1e-5)
+    np.testing.assert_allclose(sel, expect[:, 1], atol=1e-5)
+
+
+@given(st.integers(0, 10**6))
+@settings(max_examples=10, deadline=None)
+def test_tokenizer_roundtrip(seed):
+    from repro.data.pipeline import ByteTokenizer
+    rng = np.random.default_rng(seed)
+    text = "".join(chr(rng.integers(32, 127)) for _ in range(rng.integers(1, 80)))
+    tok = ByteTokenizer(512)
+    assert tok.decode(tok.encode(text)) == text
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_pipeline_batches_deterministic(seed):
+    from repro.data.pipeline import PackedLMConfig, PackedLMDataset
+    texts = [f"document {i} with some text body" for i in range(20)]
+    cfg = PackedLMConfig(seq_len=32, batch_size=4, seed=seed)
+    a = PackedLMDataset(texts, cfg).batch_at(7)
+    b = PackedLMDataset(texts, cfg).batch_at(7)
+    assert np.array_equal(a["tokens"], b["tokens"])
+    assert np.array_equal(a["labels"], b["labels"])

@@ -1,0 +1,130 @@
+"""Per-architecture smoke tests (assignment deliverable f).
+
+Each assigned architecture instantiates its REDUCED config and runs one
+forward + one train step on CPU, asserting output shapes and finiteness.
+The FULL configs are exercised only via the dry-run (no allocation).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common.config import TrainConfig
+from repro.configs import ARCH_IDS, get_config, get_smoke
+from repro.models import steps, transformer as tr
+from repro.optim import adamw
+
+
+@pytest.fixture(scope="module")
+def rngs():
+    return jax.random.PRNGKey(0), jax.random.PRNGKey(1)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_and_train_step(arch, rngs):
+    k0, k1 = rngs
+    cfg = get_smoke(arch)
+    params = tr.init_params(cfg, k0)
+    b, s = 2, 32
+    tokens = jax.random.randint(k1, (b, s), 0, cfg.vocab_size)
+    memory = None
+    if cfg.cross_attn_every:
+        memory = jax.random.normal(
+            k1, (b, cfg.cross_attn_memory_len, cfg.frontend_embed_dim)) * 0.1
+    logits, _, aux = tr.forward(params, tokens, cfg, memory=memory)
+    assert logits.shape == (b, s, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits))), "NaN/Inf in logits"
+
+    batch = {"tokens": tokens, "labels": jnp.roll(tokens, -1, axis=1)}
+    if memory is not None:
+        batch["memory"] = memory
+    ts = jax.jit(steps.make_train_step(cfg, TrainConfig(total_steps=4)))
+    p2, opt2, met = ts(params, adamw.init_opt_state(params), batch)
+    assert np.isfinite(float(met["loss"]))
+    assert float(met["grad_norm"]) > 0.0
+    # params actually changed
+    delta = sum(float(jnp.sum(jnp.abs(a - b2)))
+                for a, b2 in zip(jax.tree.leaves(params), jax.tree.leaves(p2)))
+    assert delta > 0.0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_matches_assignment(arch):
+    """The FULL config carries the exact assigned hyperparameters."""
+    assigned = {
+        "deepseek-v2-236b": dict(num_layers=60, d_model=5120, num_heads=128,
+                                 vocab_size=102400),
+        "llama4-maverick-400b-a17b": dict(num_layers=48, d_model=5120,
+                                          num_heads=40, num_kv_heads=8,
+                                          vocab_size=202048),
+        "musicgen-medium": dict(num_layers=48, d_model=1536, num_heads=24,
+                                num_kv_heads=24, d_ff=6144, vocab_size=2048),
+        "mistral-nemo-12b": dict(num_layers=40, d_model=5120, num_heads=32,
+                                 num_kv_heads=8, d_ff=14336, vocab_size=131072),
+        "phi4-mini-3.8b": dict(num_layers=32, d_model=3072, num_heads=24,
+                               num_kv_heads=8, d_ff=8192, vocab_size=200064),
+        "minitron-8b": dict(num_layers=32, d_model=4096, num_heads=32,
+                            num_kv_heads=8, d_ff=16384, vocab_size=256000),
+        "starcoder2-3b": dict(num_layers=30, d_model=3072, num_heads=24,
+                              num_kv_heads=2, d_ff=12288, vocab_size=49152),
+        "llama-3.2-vision-90b": dict(num_layers=100, d_model=8192, num_heads=64,
+                                     num_kv_heads=8, d_ff=28672,
+                                     vocab_size=128256),
+        "zamba2-1.2b": dict(num_layers=38, d_model=2048, num_heads=32,
+                            d_ff=8192, vocab_size=32000),
+        "xlstm-350m": dict(num_layers=24, d_model=1024, num_heads=4, d_ff=0,
+                           vocab_size=50304),
+    }[arch]
+    cfg = get_config(arch)
+    for k, v in assigned.items():
+        assert getattr(cfg, k) == v, f"{arch}.{k}: {getattr(cfg, k)} != {v}"
+    if arch == "deepseek-v2-236b":
+        assert cfg.mla.kv_lora_rank == 512
+        assert cfg.moe.num_experts == 160 and cfg.moe.top_k == 6
+        assert cfg.moe.num_shared_experts == 2
+    if arch == "llama4-maverick-400b-a17b":
+        assert cfg.moe.num_experts == 128 and cfg.moe.top_k == 1
+    if arch == "zamba2-1.2b":
+        assert cfg.ssm.state_dim == 64
+
+
+@pytest.mark.parametrize("arch", ["mistral-nemo-12b", "zamba2-1.2b",
+                                  "xlstm-350m", "deepseek-v2-236b"])
+def test_decode_matches_full_forward(arch, rngs):
+    """prefill + decode == full forward (within cache-quantization noise)."""
+    k0, k1 = rngs
+    cfg = dataclasses.replace(get_smoke(arch), dtype="float32")
+    if cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    params = tr.init_params(cfg, k0)
+    b, s = 2, 33
+    tokens = jax.random.randint(k1, (b, s), 0, cfg.vocab_size)
+    pf = steps.make_prefill_step(cfg, s + 4)
+    dec = steps.make_decode_step(cfg)
+    state, _ = pf(params, tokens[:, : s - 1])
+    pos = jnp.full((b, 1), s - 1, jnp.int32)
+    _, dec_logits = dec(params, state, tokens[:, s - 1 : s], pos)
+    full, _, _ = tr.forward(params, tokens, cfg)
+    scale = float(jnp.max(jnp.abs(full[:, -1]))) + 1e-9
+    err = float(jnp.max(jnp.abs(dec_logits - full[:, -1]))) / scale
+    assert err < 0.15, f"decode/full relative mismatch {err}"
+
+
+def test_param_counts_match_published_sizes():
+    expect = {"deepseek-v2-236b": (236, 0.10), "llama4-maverick-400b-a17b": (400, 0.12),
+              "mistral-nemo-12b": (12, 0.15), "phi4-mini-3.8b": (3.8, 0.15),
+              "zamba2-1.2b": (1.2, 0.3), "xlstm-350m": (0.35, 0.35),
+              "llama-3.2-vision-90b": (90, 0.15)}
+    for arch, (bn, tol) in expect.items():
+        n = tr.count_params(get_config(arch)) / 1e9
+        assert abs(n - bn) / bn < tol, f"{arch}: {n:.1f}B vs published {bn}B"
+
+
+def test_moe_active_params():
+    cfg = get_config("deepseek-v2-236b")
+    na = tr.active_param_count(cfg) / 1e9
+    assert 15 < na < 30, f"deepseek active params {na:.1f}B != ~21B"

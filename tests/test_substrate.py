@@ -1,0 +1,172 @@
+"""Substrate tests: checkpointing (atomicity, rotation, elastic restore),
+fault-tolerant training restart, data pipeline straggler backup, optimizer,
+serving engine batching equivalence."""
+
+import dataclasses
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.common.config import TrainConfig
+from repro.configs import get_smoke
+from repro.data.pipeline import (ByteTokenizer, PackedLMConfig, PackedLMDataset,
+                                 PrefetchLoader)
+from repro.models import transformer as tr
+from repro.optim import adamw
+from repro.serving.engine import Request, ServeEngine
+
+
+# --------------------------------------------------------------------------
+# checkpointing
+# --------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip_and_rotation(tmp_path):
+    d = str(tmp_path / "ck")
+    tree = {"a": jnp.arange(6.0).reshape(2, 3), "b": {"c": jnp.ones(4)}}
+    for step in (10, 20, 30, 40):
+        ckpt.save(d, step, tree, keep=2)
+    assert ckpt.latest_step(d) == 40
+    names = sorted(os.listdir(d))
+    assert names == ["step_00000030", "step_00000040"]    # rotation kept 2
+    restored, step = ckpt.restore(d, tree)
+    assert step == 40
+    np.testing.assert_array_equal(np.asarray(restored["a"]), np.asarray(tree["a"]))
+
+
+def test_checkpoint_atomicity_no_partial_reads(tmp_path):
+    d = str(tmp_path / "ck")
+    tree = {"w": jnp.zeros(8)}
+    ckpt.save(d, 1, tree)
+    # a stale .tmp dir (simulated crash mid-write) must be invisible
+    os.makedirs(os.path.join(d, "step_00000002.tmp"))
+    assert ckpt.latest_step(d) == 1
+
+
+def test_checkpoint_incompatible_template_rejected(tmp_path):
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 5, {"w": jnp.zeros(8)})
+    with pytest.raises(ValueError):
+        ckpt.restore(d, {"w": jnp.zeros(8), "extra": jnp.zeros(2)})
+
+
+def test_elastic_restore_onto_new_mesh(tmp_path):
+    """A checkpoint written unsharded restores onto a (different) mesh."""
+    from jax.sharding import PartitionSpec as P
+    from repro.distributed.mesh import make_host_mesh
+    d = str(tmp_path / "ck")
+    tree = {"w": jnp.arange(16.0).reshape(4, 4)}
+    ckpt.save(d, 1, tree)
+    mesh = make_host_mesh()
+    restored, _ = ckpt.restore(d, tree, mesh=mesh, specs={"w": P("data", None)})
+    np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(tree["w"]))
+    assert restored["w"].sharding.mesh.shape["data"] == len(jax.devices())
+
+
+# --------------------------------------------------------------------------
+# fault-tolerant training
+# --------------------------------------------------------------------------
+
+def test_train_restart_after_injected_failure(tmp_path):
+    from repro.launch.train import SimulatedFailure, train
+    d = str(tmp_path / "ck")
+    with pytest.raises(SimulatedFailure):
+        train("xlstm-350m", steps_n=12, batch=2, seq=32, ckpt_dir=d,
+              ckpt_every=4, fail_at=9, log_every=100)
+    assert ckpt.latest_step(d) == 8            # progress survived the crash
+    out = train("xlstm-350m", steps_n=12, batch=2, seq=32, ckpt_dir=d,
+                ckpt_every=4, log_every=100)   # resumes at 8, finishes
+    assert np.isfinite(out["loss"])
+    assert ckpt.latest_step(d) == 12
+
+
+# --------------------------------------------------------------------------
+# data pipeline
+# --------------------------------------------------------------------------
+
+def test_pipeline_host_sharding_partitions_docs():
+    texts = [f"doc {i}" for i in range(10)]
+    streams = []
+    for h in range(2):
+        cfg = PackedLMConfig(seq_len=8, batch_size=1, host_index=h, host_count=2)
+        streams.append(PackedLMDataset(texts, cfg).stream)
+    # different hosts own different documents
+    assert not np.array_equal(streams[0], streams[1])
+
+
+def test_prefetch_backup_on_straggler():
+    texts = ["some training text here"] * 4
+    ds = PackedLMDataset(texts, PackedLMConfig(seq_len=16, batch_size=2))
+
+    class StalledLoader(PrefetchLoader):
+        def _produce(self):     # producer never produces: permanent straggler
+            pass
+
+    loader = StalledLoader(ds, timeout_s=0.05)
+    b = loader.next()
+    assert b["tokens"].shape == (2, 16)
+    assert loader.backup_batches == 1          # self-backup path exercised
+    # deterministic: backup equals what the producer would have made
+    np.testing.assert_array_equal(b["tokens"], ds.batch_at(0)["tokens"])
+    loader.close()
+
+
+# --------------------------------------------------------------------------
+# optimizer
+# --------------------------------------------------------------------------
+
+def test_adamw_decreases_loss_quadratic():
+    tcfg = TrainConfig(learning_rate=0.1, warmup_steps=1, total_steps=50,
+                       weight_decay=0.0)
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    opt = adamw.init_opt_state(params)
+
+    def loss(p):
+        return jnp.sum(jnp.square(p["w"]))
+
+    for _ in range(50):
+        g = jax.grad(loss)(params)
+        params, opt, _ = adamw.adamw_update(params, g, opt, tcfg)
+    assert float(loss(params)) < 0.1
+
+
+def test_grad_compression_roundtrip():
+    g = {"a": jnp.asarray([0.5, -1.5, 2.0]), "b": jnp.asarray([[1e-3, -1e-3]])}
+    for mode in ("fp16", "int8"):
+        payload, deq = adamw.compress_grads(g, mode)
+        back = deq(payload)
+        for k in g:
+            np.testing.assert_allclose(np.asarray(back[k]), np.asarray(g[k]),
+                                       atol=0.02 if mode == "int8" else 1e-3)
+
+
+def test_grad_clip():
+    g = {"w": jnp.full(4, 100.0)}
+    clipped, norm = adamw.clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(200.0)
+    assert float(adamw.global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+
+
+# --------------------------------------------------------------------------
+# serving
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["mistral-nemo-12b", "zamba2-1.2b"])
+def test_engine_padded_batch_equals_single(arch):
+    cfg = dataclasses.replace(get_smoke(arch), dtype="float32")
+    params = tr.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, size=l).astype(np.int32)
+               for l in (4, 7, 11)]
+    eng = ServeEngine(cfg, params, batch_slots=3, capacity=48)
+    reqs = [Request(p, max_new_tokens=5) for p in prompts]
+    eng.run(reqs)
+    for p, r in zip(prompts, reqs):
+        e1 = ServeEngine(cfg, params, batch_slots=1, capacity=48)
+        r1 = Request(p, max_new_tokens=5)
+        e1.run([r1])
+        assert r1.out_tokens == r.out_tokens
