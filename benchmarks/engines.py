@@ -1,0 +1,84 @@
+"""Engine-comparison benchmark: step-② backends head to head.
+
+For each synth table, materialize the used featurizations once, then run
+the same CNF through every ``repro.engine`` backend and report
+
+  * wall-clock seconds (CPU container: the Pallas paths run in interpret
+    mode, so treat their wall numbers as correctness-path overhead, not
+    TPU projections — the transfer-byte columns are the portable signal);
+  * bytes moved device->host to recover the candidate set;
+  * the O(n_l·n_r) boolean-plane size that the sharded backend's
+    O(candidates) transfer replaces.
+
+Usage:  PYTHONPATH=src python -m benchmarks.run --fast --only engines
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.costs import CostLedger
+from repro.data import synth
+from repro.data.cnf_fixtures import representative_cnf
+from repro.data.simulated_llm import SimulatedExtractor
+from repro.engine import ENGINES, get_engine
+
+# engine construction options tuned for the CPU container: small tiles keep
+# interpret-mode pallas tractable; on TPU the defaults (256/512) apply.
+_CPU_OPTS = {
+    "numpy": dict(block=2048),
+    "pallas": dict(tl=64, tr=64),
+    "sharded": dict(tl=32, tr=32, r_chunk=128),
+}
+
+
+def _tables(fast: bool):
+    s = 1 if fast else 2
+    return {
+        "police_records": lambda: synth.police_records(
+            n_incidents=60 * s, reports_per_incident=2),
+        "citations": lambda: synth.citations(n_docs=150 * s),
+    }
+
+
+def run(fast: bool = True):
+    rows = []
+    for name, mk in _tables(fast).items():
+        ds = mk()
+        ext = SimulatedExtractor(ds)
+        specs, clauses, thetas = representative_cnf(ds)
+        feats = ext.materialize(specs, CostLedger())
+        baseline = None
+        for ename in ENGINES:
+            eng = get_engine(ename, **_CPU_OPTS.get(ename, {}))
+            res = eng.evaluate(feats, clauses, thetas)
+            if baseline is None:
+                baseline = res.candidates
+            agree = res.candidates == baseline
+            row = {"table": name, "engine": ename, "n_l": res.stats.n_l,
+                   "n_r": res.stats.n_r, "candidates": res.stats.n_candidates,
+                   "wall_s": round(res.stats.wall_s, 3),
+                   "bytes_to_host": res.stats.bytes_to_host,
+                   "plane_bytes": res.stats.plane_bytes,
+                   "agrees_with_numpy": agree}
+            rows.append(row)
+            print(f"engines,{name},{ename},candidates={row['candidates']},"
+                  f"bytes_to_host={row['bytes_to_host']},"
+                  f"plane_bytes={row['plane_bytes']},wall_s={row['wall_s']},"
+                  f"agree={agree}")
+            if not agree:
+                raise AssertionError(
+                    f"engine {ename} disagrees with numpy on {name}")
+    return rows
+
+
+def main(fast: bool):
+    from benchmarks.run import _emit
+    rows = run(fast)
+    _emit(rows, "engines")
+
+
+if __name__ == "__main__":
+    main(fast=True)

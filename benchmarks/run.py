@@ -172,6 +172,13 @@ def kernel_bench(fast: bool):
     kb.main(fast)
 
 
+def engine_bench(fast: bool):
+    """Step-② engine comparison: wall-clock + bytes-to-host per backend
+    (numpy / pallas / sharded; see DESIGN.md §5)."""
+    from benchmarks import engines as eb
+    eb.main(fast)
+
+
 ALL = {
     "table2": table2_guarantees,
     "table3": table3_cost_ratio,
@@ -180,6 +187,7 @@ ALL = {
     "fig9": fig9_breakdown,
     "fig10": fig10_characteristics,
     "kernels": kernel_bench,
+    "engines": engine_bench,
 }
 
 

@@ -6,12 +6,13 @@ the Fig-9-style cost breakdown.
 import argparse
 import json
 
+from repro.engine import ENGINES
 from repro.launch.join import run_join
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--engine", default="numpy", choices=["numpy", "pallas"])
+    ap.add_argument("--engine", default="numpy", choices=list(ENGINES))
     ap.add_argument("--target", type=float, default=0.9)
     ap.add_argument("--size", type=float, default=0.6)
     args = ap.parse_args()

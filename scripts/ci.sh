@@ -1,0 +1,19 @@
+#!/usr/bin/env bash
+# CI gate: tier-1 test subset + a smoke benchmark on one small table.
+#
+#   tier-1:  python -m pytest -q -m "not slow"     (< 1 minute)
+#   smoke:   engine-comparison benchmark, fast sizes (DESIGN.md §5)
+#
+# The slow suite (system joins, per-arch smoke tests) runs separately:
+#   python -m pytest -q -m slow
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1: fast test subset =="
+python -m pytest -q -m "not slow"
+
+echo "== smoke benchmark: step-2 engines on one small table =="
+python -m benchmarks.run --fast --only engines
+
+echo "CI OK"

@@ -8,7 +8,7 @@
   5. T' = adj-target(k+, r, T, δ·)            (offline MC, cached)
   6. Θ* = argmin FPR s.t. recall_{S'} >= T'   (Eq 4)
   7. full-corpus extraction for used featurizations (cost: inference)
-  8. blocked CNF evaluation over L×R -> Ŷ     (numpy or Pallas engine)
+  8. blocked CNF evaluation over L×R -> Ŷ     (repro.engine backend)
   9. refinement: oracle on Ŷ                  (cost: refinement) — precision 1
      (or Appx-C featurization-precision subsets when T_P < 1)
 
@@ -45,7 +45,7 @@ class FDJConfig:
     max_iter: int = 8              # Alg 1 iterations
     mc_trials: int = 20000
     block: int = 4096              # L/R block edge for step-2 evaluation
-    engine: str = "numpy"          # numpy | pallas (step-2 backend)
+    engine: str = "numpy"          # numpy | pallas | sharded (repro.engine)
     seed: int = 0
 
 
@@ -61,6 +61,7 @@ class JoinResult:
     t_prime: float
     candidate_count: int
     met_target: bool
+    engine_stats: Optional[object] = None   # repro.engine.EngineStats of step ②
 
 
 def _sample_pairs(n_l: int, n_r: int, k: int, rng) -> list:
@@ -132,13 +133,13 @@ def fdj_join(dataset, oracle, proposer, extractor, cfg: FDJConfig) -> JoinResult
         theta = np.zeros(0)
         feasible = False
 
+    engine_stats = None
     if not feasible or not sc_local.n_clauses:
         # fall back: decomposition admits everything (always-sound)
         candidates = [(i, j) for i in range(n_l) for j in range(n_r)]
     else:
-        candidates = _evaluate_cnf_blocked(dataset, extractor, used_specs,
-                                           sc_local, theta, ledger,
-                                           cfg.block, cfg.engine)
+        candidates, engine_stats = _evaluate_cnf(extractor, used_specs,
+                                                 sc_local, theta, ledger, cfg)
 
     # --- 9. refinement ---------------------------------------------------------
     out_pairs: set = set()
@@ -160,38 +161,24 @@ def fdj_join(dataset, oracle, proposer, extractor, cfg: FDJConfig) -> JoinResult
         candidate_count=len(cand_arr),
         met_target=(recall >= cfg.recall_target - 1e-12
                     and precision >= cfg.precision_target - 1e-12),
+        engine_stats=engine_stats,
     )
 
 
-def _evaluate_cnf_blocked(dataset, extractor, used_specs, sc: Scaffold,
-                          theta: np.ndarray, ledger: CostLedger,
-                          block: int, engine: str) -> list:
-    """Step ②: blocked CNF evaluation over the full cross product."""
-    n_l, n_r = dataset.n_l, dataset.n_r
+def _evaluate_cnf(extractor, used_specs, sc: Scaffold, theta: np.ndarray,
+                  ledger: CostLedger, cfg: FDJConfig):
+    """Step 2: CNF evaluation over the full cross product via repro.engine.
+
+    Returns (candidates, EngineStats).  Engine selection/backends live in
+    ``repro.engine`` (DESIGN.md section 2); this function only materializes
+    the used featurizations (charging the ledger) and dispatches.
+    """
+    from repro.engine import get_engine
+
     feats = extractor.materialize(used_specs, ledger)    # full-corpus FeatureData
-    out = []
-    if engine == "pallas":
-        from repro.kernels.fused_cnf_join import ops as cnf_ops
-        return cnf_ops.evaluate_corpus(feats, sc.clauses, theta, block)
-    for i0 in range(0, n_l, block):
-        il = np.arange(i0, min(i0 + block, n_l))
-        for j0 in range(0, n_r, block):
-            jr = np.arange(j0, min(j0 + block, n_r))
-            ok = None
-            for ci, clause in enumerate(sc.clauses):
-                cd = None
-                for f in clause:
-                    d = feats[f].distance_block(il, jr)
-                    cd = d if cd is None else np.minimum(cd, d)
-                pas = cd <= theta[ci]
-                ok = pas if ok is None else (ok & pas)
-                if not ok.any():
-                    break
-            if ok is None or not ok.any():
-                continue
-            ii, jj = np.nonzero(ok)
-            out.extend(zip((il[ii]).tolist(), (jr[jj]).tolist()))
-    return out
+    opts = {"block": cfg.block} if cfg.engine == "numpy" else {}
+    res = get_engine(cfg.engine, **opts).evaluate(feats, sc.clauses, theta)
+    return res.candidates, res.stats
 
 
 def _precision_extension(cand_pairs, used_specs, extractor, label, ledger,

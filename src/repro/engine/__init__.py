@@ -1,0 +1,27 @@
+"""Step-② evaluation engines (see DESIGN.md §2-3).
+
+``get_engine("numpy" | "pallas" | "sharded", **opts)`` is the single entry
+point used by ``core.join``, ``launch.join`` and ``benchmarks.engines``.
+"""
+
+from __future__ import annotations
+
+from repro.engine.base import CnfEngine, EngineResult, EngineStats
+
+ENGINES = ("numpy", "pallas", "sharded")
+
+
+def get_engine(name: str, **opts) -> CnfEngine:
+    if name == "numpy":
+        from repro.engine.numpy_engine import NumpyEngine
+        return NumpyEngine(**opts)
+    if name == "pallas":
+        from repro.engine.pallas_engine import PallasEngine
+        return PallasEngine(**opts)
+    if name == "sharded":
+        from repro.engine.sharded import ShardedEngine
+        return ShardedEngine(**opts)
+    raise ValueError(f"unknown engine {name!r}; expected one of {ENGINES}")
+
+
+__all__ = ["CnfEngine", "EngineResult", "EngineStats", "ENGINES", "get_engine"]

@@ -1,0 +1,118 @@
+"""CnfEngine — the step-② evaluation-engine interface.
+
+Step ② of FDJ (Alg 6) evaluates the featurized decomposition — a CNF with
+per-clause tied thresholds (Lemma D.1 form) — over the full L×R cross
+product and returns the surviving candidate pairs.  Everything downstream
+(refinement, precision subsets) is O(candidates); everything upstream
+(featurization) is O(n_l + n_r); this stage is the only O(n_l · n_r)
+compute in the system, so it gets its own subsystem with three backends:
+
+  * ``numpy``   — single-host blocked loop (reference semantics)
+  * ``pallas``  — single-device fused kernel, packed-bitmask host transfer
+  * ``sharded`` — shard_map over the mesh "data" axis with on-device
+                  candidate extraction; host traffic is O(candidates)
+
+All backends must return the *identical* candidate set for identical
+inputs (guarded by tests/test_engines.py).  Engines also report
+``EngineStats`` so benchmarks can compare host-transfer bytes — the
+scaling axis the sharded backend exists to fix.
+
+Semantics contract (shared across backends, enforced here):
+
+  * empty clause list ⇒ vacuous conjunction ⇒ every pair is a candidate;
+  * distances are clipped to [0, 1]; a pair passes clause ``c`` iff the
+    min distance over the clause's featurizations is <= theta[c];
+  * missing values are encoded inside the feature arrays (distance 1), so
+    a clause whose features are all missing only passes when theta >= 1;
+  * candidates are returned as a row-major-sorted list of (i, j) tuples.
+"""
+
+from __future__ import annotations
+
+import abc
+import dataclasses
+import time
+from typing import Sequence
+
+
+@dataclasses.dataclass
+class EngineStats:
+    """Per-evaluation accounting, for the engine-comparison benchmark."""
+    engine: str
+    n_l: int = 0
+    n_r: int = 0
+    n_candidates: int = 0
+    wall_s: float = 0.0
+    # bytes moved device -> host to recover the candidate set.  The numpy
+    # backend computes on the host (0 by definition); the pallas backend
+    # pulls the packed n_l×n_r/8 bitmask; the sharded backend pulls only
+    # per-device counts plus the compacted (i, j) pairs.
+    bytes_to_host: int = 0
+
+    @property
+    def plane_bytes(self) -> int:
+        """Size of the full boolean match plane — the O(n²) yardstick."""
+        return self.n_l * self.n_r
+
+    def as_dict(self) -> dict:
+        return {
+            "engine": self.engine, "n_l": self.n_l, "n_r": self.n_r,
+            "n_candidates": self.n_candidates, "wall_s": self.wall_s,
+            "bytes_to_host": self.bytes_to_host,
+            "plane_bytes": self.plane_bytes,
+        }
+
+
+@dataclasses.dataclass
+class EngineResult:
+    candidates: list                   # sorted [(i, j), ...]
+    stats: EngineStats
+
+
+class CnfEngine(abc.ABC):
+    """One step-② backend.  Subclasses implement ``_evaluate``."""
+
+    name: str = "abstract"
+
+    def evaluate(self, feats: Sequence, clauses: Sequence, thetas) -> EngineResult:
+        """feats: list of core.featurize.FeatureData (full corpus);
+        clauses: CNF over feature indices; thetas: per-clause thresholds."""
+        thetas = tuple(thetas)         # bind once: callers may pass iterators
+        if len(clauses) != len(thetas):
+            raise ValueError(
+                f"{len(clauses)} clauses but {len(thetas)} thresholds")
+        n_l, n_r = corpus_shape(feats, clauses)
+        t0 = time.perf_counter()
+        if not clauses:
+            # vacuous conjunction: admit everything without touching a backend
+            cands = [(i, j) for i in range(n_l) for j in range(n_r)]
+            stats = EngineStats(self.name, n_l=n_l, n_r=n_r,
+                                n_candidates=len(cands),
+                                wall_s=time.perf_counter() - t0)
+            return EngineResult(cands, stats)
+        cands, bytes_to_host = self._evaluate(feats, clauses, thetas, n_l, n_r)
+        cands = sorted(cands)
+        stats = EngineStats(self.name, n_l=n_l, n_r=n_r,
+                            n_candidates=len(cands),
+                            wall_s=time.perf_counter() - t0,
+                            bytes_to_host=bytes_to_host)
+        return EngineResult(cands, stats)
+
+    @abc.abstractmethod
+    def _evaluate(self, feats, clauses, thetas, n_l: int, n_r: int):
+        """Returns (candidates, bytes_to_host)."""
+
+
+def corpus_shape(feats: Sequence, clauses: Sequence) -> tuple:
+    """(n_l, n_r) from the feature arrays; validates cross-feature agreement."""
+    if not feats:
+        raise ValueError("no featurizations materialized")
+    shapes = {(f.data_l.shape[0], f.data_r.shape[0]) for f in feats}
+    if len(shapes) != 1:
+        raise ValueError(f"inconsistent corpus shapes across features: {shapes}")
+    for c in clauses:
+        for fi in c:
+            if not 0 <= fi < len(feats):
+                raise ValueError(f"clause references feature {fi}, "
+                                 f"have {len(feats)}")
+    return next(iter(shapes))

@@ -1,0 +1,68 @@
+"""On-device candidate extraction from the packed CNF bitmask.
+
+The fused kernel emits a uint32 mask packed 32 R-neighbours per word.
+Pulling that mask to the host costs n_l·n_r/8 bytes regardless of how few
+pairs survive — at corpus scale the transfer, not the kernel, dominates.
+``compact_append`` turns the mask into a dense buffer of (i, j) index
+pairs *on the device* via popcount + prefix-sum compaction:
+
+  1. ``lax.population_count`` per word  -> per-word candidate counts;
+  2. exclusive prefix-sum over words (row-major) -> per-word base offsets;
+  3. per-word bit expansion + intra-word exclusive prefix-sum -> bit slots;
+  4. scatter (i, j) into the output buffer at base+slot (OOB writes drop).
+
+The buffer has a fixed capacity (scatter targets must be static under
+jit); overflow is *detected, never silent* — the returned count keeps
+growing past capacity, so the caller compares count vs capacity and
+retries bigger.  Host traffic becomes O(candidates): one scalar count plus
+8 bytes per surviving pair.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def compact_append(packed, buf, count, *, row_offset=0, col_offset=0):
+    """Append the set bits of ``packed`` to ``buf`` as (i, j) pairs.
+
+    packed: uint32 (nl, nw) mask (nw words of 32 R-columns each)
+    buf:    int32 (capacity, 2) output buffer (scatter target)
+    count:  int32 scalar — pairs already in ``buf``; the write cursor
+    row_offset/col_offset: global coordinates of packed[0, 0]'s bit 0
+      (traced values are fine — e.g. ``lax.axis_index`` inside shard_map)
+
+    Returns (buf, new_count).  new_count may exceed capacity — that means
+    the tail was dropped and the caller must retry with a larger buffer.
+    """
+    capacity = buf.shape[0]
+    nl, nw = packed.shape
+    counts = lax.population_count(packed).astype(jnp.int32)          # (nl, nw)
+    flat = counts.reshape(-1)
+    word_base = (jnp.cumsum(flat) - flat).reshape(nl, nw)            # exclusive
+    bitpos = jnp.arange(32, dtype=jnp.uint32)
+    bits = ((packed[:, :, None] >> bitpos) & jnp.uint32(1)).astype(jnp.int32)
+    intra = jnp.cumsum(bits, axis=-1) - bits                         # exclusive
+    pos = count + word_base[:, :, None] + intra                      # (nl,nw,32)
+    pos = jnp.where(bits == 1, pos, capacity)                        # unset -> OOB
+    rows = jnp.broadcast_to(
+        jnp.arange(nl, dtype=jnp.int32)[:, None, None] + row_offset, bits.shape)
+    cols = jnp.broadcast_to(
+        jnp.arange(nw, dtype=jnp.int32)[None, :, None] * 32
+        + jnp.arange(32, dtype=jnp.int32)[None, None, :] + col_offset,
+        bits.shape)
+    pairs = jnp.stack([rows, cols], axis=-1).reshape(-1, 2)
+    buf = buf.at[pos.reshape(-1)].set(pairs, mode="drop")
+    return buf, count + flat.sum()
+
+
+def extract_pairs(packed, *, capacity, row_offset=0, col_offset=0):
+    """One-shot compaction of a packed mask into a fresh buffer.
+
+    Returns (buf int32 (capacity, 2), count int32).  Entries past ``count``
+    are -1 filler; count > capacity signals overflow (see compact_append).
+    """
+    buf = jnp.full((capacity, 2), -1, jnp.int32)
+    return compact_append(packed, buf, jnp.zeros((), jnp.int32),
+                          row_offset=row_offset, col_offset=col_offset)

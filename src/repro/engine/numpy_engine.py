@@ -1,0 +1,48 @@
+"""Single-host blocked numpy backend (reference semantics).
+
+This is the loop that used to live inline in ``core/join.py``: iterate
+(L-block, R-block) tiles, build each clause's min-distance plane with
+``FeatureData.distance_block``, AND the per-clause passes, and collect the
+surviving indices.  Early exit when a block's conjunction empties.
+
+It is the semantic oracle for the other backends — every engine must match
+its candidate set exactly (tests/test_engines.py).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.engine.base import CnfEngine
+
+
+class NumpyEngine(CnfEngine):
+    name = "numpy"
+
+    def __init__(self, block: int = 4096):
+        self.block = int(block)
+
+    def _evaluate(self, feats, clauses, thetas, n_l, n_r):
+        block = self.block
+        theta = np.asarray(thetas, np.float64)
+        out = []
+        for i0 in range(0, n_l, block):
+            il = np.arange(i0, min(i0 + block, n_l))
+            for j0 in range(0, n_r, block):
+                jr = np.arange(j0, min(j0 + block, n_r))
+                ok = None
+                for ci, clause in enumerate(clauses):
+                    cd = None
+                    for f in clause:
+                        d = feats[f].distance_block(il, jr)
+                        cd = d if cd is None else np.minimum(cd, d)
+                    pas = cd <= theta[ci]
+                    ok = pas if ok is None else (ok & pas)
+                    if not ok.any():
+                        break
+                if ok is None or not ok.any():
+                    continue
+                ii, jj = np.nonzero(ok)
+                out.extend(zip((il[ii]).tolist(), (jr[jj]).tolist()))
+        # host-resident compute: no device->host candidate traffic
+        return out, 0

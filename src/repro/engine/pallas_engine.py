@@ -1,0 +1,31 @@
+"""Single-device Pallas backend.
+
+Thin wrapper over ``kernels.fused_cnf_join.ops.evaluate_corpus``: the fused
+kernel grids over the padded (n_l, n_r) plane, writes the packed uint32
+bitmask, and the *whole mask* is pulled to the host and unpacked there —
+host traffic is O(n_l · n_r / 8).  Fine for one device and modest corpora;
+the sharded backend exists for everything bigger.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.engine.base import CnfEngine
+
+
+class PallasEngine(CnfEngine):
+    name = "pallas"
+
+    def __init__(self, tl: int = 256, tr: int = 512,
+                 interpret: Optional[bool] = None):
+        self.tl = int(tl)
+        self.tr = int(tr)
+        self.interpret = interpret
+
+    def _evaluate(self, feats, clauses, thetas, n_l, n_r):
+        from repro.kernels.fused_cnf_join import ops as cnf_ops
+        pairs, mask_bytes = cnf_ops.evaluate_corpus(
+            feats, clauses, thetas, tl=self.tl, tr=self.tr,
+            interpret=self.interpret, return_mask_bytes=True)
+        return pairs, mask_bytes

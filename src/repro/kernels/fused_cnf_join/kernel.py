@@ -76,7 +76,15 @@ def cnf_join_block(emb_l, emb_r, scal_l, scal_r, clauses, thetas, *,
     """
     fv, n_l, d = emb_l.shape
     n_r = emb_r.shape[1]
-    assert n_l % tl == 0 and n_r % tr == 0 and tr % 32 == 0
+    if tr % 32 != 0:
+        raise ValueError(
+            f"tr={tr} must be a multiple of 32: the output bitmask packs "
+            f"32 R-neighbours per uint32 word and a ragged tile would be "
+            f"silently truncated")
+    if n_l % tl != 0 or n_r % tr != 0:
+        raise ValueError(
+            f"(n_l={n_l}, n_r={n_r}) must be multiples of tiles "
+            f"(tl={tl}, tr={tr}); pad via ops.pack_features")
     grid = (n_l // tl, n_r // tr)
     kernel = functools.partial(_cnf_kernel, clauses=tuple(clauses),
                                thetas=tuple(float(t) for t in thetas),

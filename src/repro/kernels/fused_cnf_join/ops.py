@@ -81,9 +81,14 @@ def pack_features(feats: Sequence, clauses: Sequence, *, tl: int, tr: int,
     return emb_l, emb_r, scal_l, scal_r, kclauses, n_l, n_r
 
 
-def evaluate_corpus(feats: Sequence, clauses: Sequence, thetas, block: int = 2048,
-                    *, tl: int = 256, tr: int = 512, interpret=None) -> list:
-    """Full-corpus CNF evaluation through the kernel; returns [(i, j), ...]."""
+def evaluate_corpus(feats: Sequence, clauses: Sequence, thetas,
+                    *, tl: int = 256, tr: int = 512, interpret=None,
+                    return_mask_bytes: bool = False):
+    """Full-corpus CNF evaluation through the kernel; returns [(i, j), ...].
+
+    With ``return_mask_bytes=True`` also returns the device->host transfer
+    size of the packed mask (the quantity the sharded engine eliminates).
+    """
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     emb_l, emb_r, scal_l, scal_r, kclauses, n_l, n_r = pack_features(
@@ -92,6 +97,10 @@ def evaluate_corpus(feats: Sequence, clauses: Sequence, thetas, block: int = 204
         jnp.asarray(emb_l), jnp.asarray(emb_r), jnp.asarray(scal_l),
         jnp.asarray(scal_r), kclauses, tuple(float(t) for t in thetas),
         tl=tl, tr=tr, interpret=interpret)
-    ok = ref.unpack_mask(np.asarray(packed), emb_r.shape[1])[:n_l, :n_r]
+    host_mask = np.asarray(packed)                  # O(n_l * n_r / 8) pull
+    ok = ref.unpack_mask(host_mask, emb_r.shape[1])[:n_l, :n_r]
     ii, jj = np.nonzero(ok)
-    return list(zip(ii.tolist(), jj.tolist()))
+    pairs = list(zip(ii.tolist(), jj.tolist()))
+    if return_mask_bytes:
+        return pairs, host_mask.nbytes
+    return pairs

@@ -34,6 +34,10 @@ def cnf_join_ref(emb_l, emb_r, scal_l, scal_r, clauses, thetas) -> jnp.ndarray:
 def pack_mask(ok: jnp.ndarray) -> jnp.ndarray:
     """Pack a boolean (n_l, n_r) matrix to uint32 words along R."""
     n_l, n_r = ok.shape
+    if n_r % 32 != 0:
+        raise ValueError(
+            f"n_r={n_r} must be a multiple of 32 to pack into uint32 words; "
+            f"a ragged tail would be silently truncated")
     okw = ok.reshape(n_l, n_r // 32, 32).astype(jnp.uint32)
     weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
     return jnp.sum(okw * weights[None, None, :], axis=-1, dtype=jnp.uint32)

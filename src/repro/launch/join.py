@@ -1,7 +1,7 @@
 """FDJ join launcher — the paper's end-to-end pipeline as a CLI.
 
   PYTHONPATH=src python -m repro.launch.join --dataset police_records \
-      --target 0.9 --delta 0.1 [--engine pallas]
+      --target 0.9 --delta 0.1 [--engine numpy|pallas|sharded]
 
 Also exposes the *distributed join step* (``build_join_cell``): the fused
 CNF evaluation over an L x R block plane lowered on the production mesh —
@@ -20,6 +20,7 @@ from repro.core.costs import naive_join_cost
 from repro.core.join import FDJConfig, fdj_join
 from repro.data import synth
 from repro.data.simulated_llm import SimulatedExtractor, SimulatedProposer
+from repro.engine import ENGINES
 
 
 def run_join(dataset: str = "police_records", target: float = 0.9,
@@ -50,6 +51,7 @@ def run_join(dataset: str = "police_records", target: float = 0.9,
         "candidates": res.candidate_count,
         "cost_ratio": round(res.cost.total / naive, 4),
         "breakdown": {k: round(v / naive, 4) for k, v in res.cost.breakdown().items()},
+        "engine": (res.engine_stats.as_dict() if res.engine_stats else None),
     }
 
 
@@ -93,7 +95,7 @@ def main():
     ap.add_argument("--target", type=float, default=0.9)
     ap.add_argument("--delta", type=float, default=0.1)
     ap.add_argument("--precision-target", type=float, default=1.0)
-    ap.add_argument("--engine", default="numpy", choices=["numpy", "pallas"])
+    ap.add_argument("--engine", default="numpy", choices=list(ENGINES))
     ap.add_argument("--size", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()

@@ -1,0 +1,140 @@
+"""Packed-bitmask invariants: round-trip, on-device compaction, ragged-tile
+errors.
+
+The packed uint32 mask (32 R-neighbours per word) is the wire format
+between the fused kernel and candidate extraction; these tests pin down
+its algebra: ``unpack(pack(x)) == x``, popcount/prefix-sum compaction
+equals the ``np.nonzero`` oracle, and a non-multiple-of-32 R tile raises
+instead of silently truncating.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.engine import extract
+from repro.kernels.fused_cnf_join import ref as cnf_ref
+from repro.kernels.fused_cnf_join.kernel import VEC, cnf_join_block
+
+
+# --- round-trip -------------------------------------------------------------
+
+@pytest.mark.parametrize("seed,shape", [
+    (0, (8, 32)), (1, (33, 64)), (2, (5, 128)), (3, (1, 32)), (4, (64, 96)),
+])
+def test_pack_unpack_roundtrip(seed, shape):
+    rng = np.random.default_rng(seed)
+    ok = rng.random(shape) < rng.uniform(0.05, 0.9)
+    packed = np.asarray(cnf_ref.pack_mask(jnp.asarray(ok)))
+    assert packed.dtype == np.uint32
+    assert packed.shape == (shape[0], shape[1] // 32)
+    back = cnf_ref.unpack_mask(packed, shape[1])
+    assert np.array_equal(back, ok)
+
+
+def test_unpack_narrower_than_packed():
+    """unpack_mask(p, n_r) drops padding columns beyond n_r."""
+    ok = np.zeros((4, 64), bool)
+    ok[2, 50] = True
+    ok[1, 3] = True
+    packed = np.asarray(cnf_ref.pack_mask(jnp.asarray(ok)))
+    back = cnf_ref.unpack_mask(packed, 40)
+    assert back.shape == (4, 40)
+    assert back[1, 3] and not back.any(axis=1)[2]
+
+
+# --- on-device compaction vs np.nonzero oracle ------------------------------
+
+@pytest.mark.parametrize("seed", range(6))
+def test_extraction_matches_nonzero_oracle(seed):
+    rng = np.random.default_rng(100 + seed)
+    nl = int(rng.integers(1, 40))
+    nw = int(rng.integers(1, 6))
+    ok = rng.random((nl, nw * 32)) < rng.uniform(0.0, 0.6)
+    packed = jnp.asarray(np.asarray(cnf_ref.pack_mask(jnp.asarray(ok))))
+    cap = int(ok.sum()) + 8
+    buf, count = extract.extract_pairs(packed, capacity=cap)
+    count = int(count)
+    assert count == int(ok.sum())
+    got = sorted(map(tuple, np.asarray(buf[:count]).tolist()))
+    ii, jj = np.nonzero(ok)
+    want = sorted(zip(ii.tolist(), jj.tolist()))
+    assert got == want
+    # filler untouched past count
+    assert np.all(np.asarray(buf[count:]) == -1)
+
+
+def test_extraction_applies_offsets():
+    ok = np.zeros((4, 32), bool)
+    ok[0, 0] = ok[3, 31] = True
+    packed = jnp.asarray(np.asarray(cnf_ref.pack_mask(jnp.asarray(ok))))
+    buf, count = extract.extract_pairs(packed, capacity=4,
+                                       row_offset=100, col_offset=1000)
+    got = sorted(map(tuple, np.asarray(buf[: int(count)]).tolist()))
+    assert got == [(100, 1000), (103, 1031)]
+
+
+def test_extraction_overflow_detected_not_silent():
+    """count keeps growing past capacity so the caller can detect + retry."""
+    ok = np.ones((8, 32), bool)                  # 256 candidates
+    packed = jnp.asarray(np.asarray(cnf_ref.pack_mask(jnp.asarray(ok))))
+    buf, count = extract.extract_pairs(packed, capacity=10)
+    assert int(count) == 256                     # true total, not clamped
+    # the first `capacity` slots hold valid pairs, nothing corrupted
+    got = np.asarray(buf)
+    assert got.shape == (10, 2)
+    assert (got >= 0).all()
+
+
+def test_extraction_append_across_chunks():
+    """compact_append accumulates two chunks exactly like one big extract."""
+    rng = np.random.default_rng(7)
+    ok1 = rng.random((16, 64)) < 0.3
+    ok2 = rng.random((16, 64)) < 0.3
+    p1 = jnp.asarray(np.asarray(cnf_ref.pack_mask(jnp.asarray(ok1))))
+    p2 = jnp.asarray(np.asarray(cnf_ref.pack_mask(jnp.asarray(ok2))))
+    cap = int(ok1.sum() + ok2.sum()) + 4
+    buf = jnp.full((cap, 2), -1, jnp.int32)
+    buf, cnt = extract.compact_append(p1, buf, jnp.zeros((), jnp.int32),
+                                      row_offset=0, col_offset=0)
+    buf, cnt = extract.compact_append(p2, buf, cnt, row_offset=0, col_offset=64)
+    got = sorted(map(tuple, np.asarray(buf[: int(cnt)]).tolist()))
+    full = np.concatenate([ok1, ok2], axis=1)
+    ii, jj = np.nonzero(full)
+    assert got == sorted(zip(ii.tolist(), jj.tolist()))
+
+
+# --- ragged-tile errors -----------------------------------------------------
+
+def test_pack_mask_rejects_ragged_width():
+    with pytest.raises(ValueError, match="multiple of 32"):
+        cnf_ref.pack_mask(jnp.zeros((4, 40), bool))
+
+
+def test_kernel_rejects_ragged_tr():
+    el = jnp.zeros((1, 64, 128), jnp.float32)
+    er = jnp.zeros((1, 48, 128), jnp.float32)
+    sl = jnp.zeros((1, 64), jnp.float32)
+    sr = jnp.zeros((1, 48), jnp.float32)
+    with pytest.raises(ValueError, match="multiple of 32"):
+        cnf_join_block(el, er, sl, sr, (((VEC, 0),),), (0.5,),
+                       tl=64, tr=48, interpret=True)
+
+
+def test_kernel_rejects_untiled_shapes():
+    el = jnp.zeros((1, 60, 128), jnp.float32)    # 60 % 32 != 0
+    er = jnp.zeros((1, 64, 128), jnp.float32)
+    sl = jnp.zeros((1, 60), jnp.float32)
+    sr = jnp.zeros((1, 64), jnp.float32)
+    with pytest.raises(ValueError, match="pack_features"):
+        cnf_join_block(el, er, sl, sr, (((VEC, 0),),), (0.5,),
+                       tl=32, tr=32, interpret=True)
+
+
+def test_sharded_engine_rejects_ragged_tr():
+    from repro.engine.sharded import ShardedEngine
+    with pytest.raises(ValueError, match="multiple of 32"):
+        ShardedEngine(tr=48)
+    with pytest.raises(ValueError, match="multiple of tr"):
+        ShardedEngine(tr=32, r_chunk=40)

@@ -1,0 +1,148 @@
+"""Engine parity: every step-② backend returns the identical candidate set.
+
+The numpy blocked loop is the semantic oracle; the Pallas (interpret) and
+sharded streaming backends must match it bit-for-bit — including ragged
+(non-tile-multiple) corpus sizes, an empty scaffold, and a feature column
+that failed extraction on every record.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.costs import CostLedger
+from repro.core.featurize import FeaturizationSpec, vectorize
+from repro.data.cnf_fixtures import representative_cnf
+from repro.data.simulated_llm import SimulatedExtractor
+from repro.data import synth
+from repro.engine import ENGINES, get_engine
+from repro.engine.base import EngineStats
+
+# small tiles: keep interpret-mode pallas fast; ragged sizes exercise padding
+_OPTS = {
+    "numpy": dict(block=64),
+    "pallas": dict(tl=32, tr=64),
+    "sharded": dict(tl=32, tr=32, r_chunk=64),
+}
+
+
+def _all_engines(feats, clauses, thetas):
+    out = {}
+    for name in ENGINES:
+        out[name] = get_engine(name, **_OPTS[name]).evaluate(
+            feats, clauses, thetas)
+    return out
+
+
+def _assert_parity(results):
+    base = results["numpy"].candidates
+    for name, res in results.items():
+        assert res.candidates == base, (
+            f"{name} disagrees with numpy: "
+            f"{len(res.candidates)} vs {len(base)} candidates")
+    return base
+
+
+# --- dataset-driven cases ---------------------------------------------------
+
+def _materialized_cnf(ds):
+    """The shared representative scaffold (same one the benchmark runs)."""
+    specs, clauses, thetas = representative_cnf(ds)
+    feats = SimulatedExtractor(ds).materialize(specs, CostLedger())
+    return feats, clauses, thetas
+
+
+@pytest.mark.parametrize("mk_cnf,mk_ds", [
+    # n = 74 / 74: not a multiple of any tile edge -> padding exercised
+    (_materialized_cnf, lambda: synth.police_records(n_incidents=37,
+                                               reports_per_incident=2, seed=5)),
+    # 101 x 101: ragged on both sides for tr=64 / r_chunk=64
+    (_materialized_cnf, lambda: synth.citations(n_docs=101, seed=9)),
+], ids=["police_ragged", "citations_ragged"])
+def test_engine_parity_on_synth_datasets(mk_cnf, mk_ds):
+    ds = mk_ds()
+    feats, clauses, thetas = mk_cnf(ds)
+    results = _all_engines(feats, clauses, thetas)
+    base = _assert_parity(results)
+    assert len(base) > 0                      # non-degenerate join
+    for res in results.values():
+        assert res.stats.n_l == ds.n_l and res.stats.n_r == ds.n_r
+        assert res.stats.n_candidates == len(base)
+
+
+def test_engine_parity_empty_scaffold():
+    """Zero clauses = vacuous conjunction: every pair is a candidate."""
+    ds = synth.police_records(n_incidents=10, reports_per_incident=2, seed=1)
+    feats, _, _ = _materialized_cnf(ds)
+    results = _all_engines(feats, [], [])
+    base = _assert_parity(results)
+    assert len(base) == ds.n_l * ds.n_r
+
+
+def test_engine_parity_all_missing_feature_column():
+    """A featurization that failed on every record: clauses using it alone
+    admit nothing (theta < 1); in a disjunction the partner carries it."""
+    n_l, n_r = 41, 53                          # ragged on purpose
+    rng = np.random.default_rng(0)
+    vals_l = [f"item {i % 7}" for i in range(n_l)]
+    vals_r = [f"item {i % 7}" for i in range(n_r)]
+    ok_spec = FeaturizationSpec("name", "", "word_overlap", "llm", "name")
+    dead_spec = FeaturizationSpec("dead", "", "semantic", "llm", "dead")
+    feats = [vectorize(ok_spec, vals_l, vals_r),
+             vectorize(dead_spec, [None] * n_l, [None] * n_r)]
+
+    # dead feature alone: no candidates anywhere
+    results = _all_engines(feats, [[1]], [0.9])
+    assert _assert_parity(results) == []
+
+    # disjunction with a live feature: behaves exactly like the live feature
+    results_dis = _all_engines(feats, [[0, 1]], [0.3])
+    results_live = _all_engines(feats, [[0]], [0.3])
+    assert _assert_parity(results_dis) == _assert_parity(results_live)
+    assert len(results_dis["numpy"].candidates) > 0
+
+
+def test_sharded_capacity_overflow_is_retried_not_truncated():
+    """An undersized initial buffer must grow and still return everything."""
+    n = 40
+    spec = FeaturizationSpec("name", "", "word_overlap", "llm", "name")
+    # every pair matches: candidate count n*n >> tiny capacity
+    feats = [vectorize(spec, ["same text"] * n, ["same text"] * n)]
+    eng = get_engine("sharded", tl=32, tr=32, r_chunk=64, capacity=64)
+    res = eng.evaluate(feats, [[0]], [0.5])
+    assert len(res.candidates) == n * n
+    assert res.candidates == get_engine("numpy").evaluate(
+        feats, [[0]], [0.5]).candidates
+
+
+def test_sharded_host_bytes_scale_with_candidates():
+    """Acceptance: sharded transfer is O(candidates), not O(n_l*n_r)."""
+    ds = synth.police_records(n_incidents=50, reports_per_incident=2, seed=3)
+    feats, clauses, thetas = _materialized_cnf(ds)
+    res = get_engine("sharded", **_OPTS["sharded"]).evaluate(
+        feats, clauses, thetas)
+    s = res.stats
+    # counts vector + 8 bytes per extracted pair (before padding filter),
+    # with a small allowance for tile-padding extras; far below the plane
+    assert s.bytes_to_host <= 8 * (s.n_candidates + 64) + 1024
+    assert s.bytes_to_host < s.plane_bytes / 4
+
+
+def test_engine_stats_shape():
+    ds = synth.police_records(n_incidents=20, reports_per_incident=2, seed=2)
+    feats, clauses, thetas = _materialized_cnf(ds)
+    res = get_engine("numpy").evaluate(feats, clauses, thetas)
+    assert isinstance(res.stats, EngineStats)
+    d = res.stats.as_dict()
+    assert d["engine"] == "numpy" and d["plane_bytes"] == ds.n_l * ds.n_r
+
+
+def test_unknown_engine_rejected():
+    with pytest.raises(ValueError, match="unknown engine"):
+        get_engine("cuda")
+
+
+def test_mismatched_thetas_rejected():
+    ds = synth.police_records(n_incidents=10, reports_per_incident=2)
+    feats, clauses, _ = _materialized_cnf(ds)
+    with pytest.raises(ValueError, match="thresholds"):
+        get_engine("numpy").evaluate(feats, clauses, [0.5])

@@ -12,6 +12,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow          # minutes of XLA compiles: not tier-1
+
 from repro.common.config import TrainConfig
 from repro.configs import ARCH_IDS, get_config, get_smoke
 from repro.models import steps, transformer as tr

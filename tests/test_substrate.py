@@ -71,6 +71,7 @@ def test_elastic_restore_onto_new_mesh(tmp_path):
 # fault-tolerant training
 # --------------------------------------------------------------------------
 
+@pytest.mark.slow
 def test_train_restart_after_injected_failure(tmp_path):
     from repro.launch.train import SimulatedFailure, train
     d = str(tmp_path / "ck")
@@ -155,6 +156,7 @@ def test_grad_clip():
 # serving
 # --------------------------------------------------------------------------
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["mistral-nemo-12b", "zamba2-1.2b"])
 def test_engine_padded_batch_equals_single(arch):
     cfg = dataclasses.replace(get_smoke(arch), dtype="float32")

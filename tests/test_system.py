@@ -8,6 +8,8 @@ Fig-9 breakdown structure, and numpy/pallas engine equivalence.
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow          # end-to-end joins: minutes, not tier-1
+
 from repro.core.costs import naive_join_cost
 from repro.core.join import FDJConfig, fdj_join
 from repro.data import synth
