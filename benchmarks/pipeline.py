@@ -1,0 +1,143 @@
+"""Pipeline regime: streaming candidate→refinement overlap vs the barrier.
+
+For one CI-shaped table, materialize the representative CNF once, then for
+each engine run step ②+⑨ two ways through the *same* RefinementPump (same
+worker thread, same oracle batching — the only variable is when candidate
+chunks become available):
+
+  * **barrier** — ``evaluate()`` to completion, then the pump refines one
+    big chunk (the pre-streaming fdj_join shape: total = step2 + refine);
+  * **stream**  — ``evaluate_stream()`` chunks land in the pump as the
+    engine produces (total → max(step2, refine) as overlap improves).
+
+The oracle here is simulated, so refinement charges dollars but takes no
+wall time; to measure *pipeline* behavior we model LLM service latency as
+``per_pair_s`` of sleep per refined pair (sized so total refine latency ≈
+the engine's own step-② wall — the regime where overlap matters).  Reported
+per row:
+
+  * ``t_first_s`` — time to first candidate chunk (barrier: the full
+    evaluate wall; the headline latency win of streaming);
+  * ``step2_wall`` / ``refine_wall`` / ``overlap_wall`` / ``total_wall``.
+
+Usage:  PYTHONPATH=src python -m benchmarks.run --fast --only pipeline
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.costs import CostLedger
+from repro.core.refine import RefinementPump
+from repro.data import synth
+from repro.data.cnf_fixtures import representative_cnf
+from repro.data.simulated_llm import SimulatedExtractor
+from repro.engine import get_engine
+
+# small tiles/blocks: many chunks on the CI shape, interpret-mode tractable
+_CPU_OPTS = {
+    "numpy": dict(block=32),
+    "pallas": dict(tl=32, tr=64, l_block=32),
+    "sharded": dict(tl=32, tr=32, r_chunk=64),
+}
+_BATCH_PAIRS = 128
+
+
+def _refine_fn(per_pair_s: float):
+    def refine(batch):
+        time.sleep(per_pair_s * len(batch))   # modeled LLM service latency
+        return set(batch)
+    return refine
+
+
+def run(fast: bool = True):
+    n = 50 if fast else 100
+    ds = synth.police_records(n_incidents=n, reports_per_incident=2, seed=0)
+    ext = SimulatedExtractor(ds)
+    specs, clauses, thetas = representative_cnf(ds)
+    feats = ext.materialize(specs, CostLedger())
+
+    rows = []
+    totals = {"barrier": 0.0, "stream": 0.0}
+    for ename in ("numpy", "pallas", "sharded"):
+        opts = _CPU_OPTS[ename]
+        # warm the jit/program caches so neither mode pays compile time
+        warm = get_engine(ename, **opts).evaluate(feats, clauses, thetas)
+        n_cands = warm.stats.n_candidates
+
+        # size refine latency to the engine's own step-② wall: the regime
+        # where pipelining matters (capped so the numpy path stays fast)
+        per_pair_s = min(max(warm.stats.wall_s, 0.25) / max(n_cands, 1), 2e-3)
+
+        # -- barrier: evaluate to completion, then pump one big chunk ------
+        pump = RefinementPump(_refine_fn(per_pair_s),
+                              batch_pairs=_BATCH_PAIRS, max_queue_chunks=4)
+        t0 = time.perf_counter()
+        res = get_engine(ename, **opts).evaluate(feats, clauses, thetas)
+        step2 = time.perf_counter() - t0
+        from repro.engine.base import CandidateChunk
+        pr = pump.run(iter([CandidateChunk(res.candidates, res.stats, 0)]))
+        barrier_total = time.perf_counter() - t0
+        totals["barrier"] += barrier_total
+        rows.append({"engine": ename, "mode": "barrier",
+                     "candidates": n_cands, "t_first_s": round(step2, 4),
+                     "step2_wall": round(step2, 4),
+                     "refine_wall": round(pr.stats.refine_wall, 4),
+                     "overlap_wall": 0.0,
+                     "total_wall": round(barrier_total, 4)})
+
+        # -- stream: pump refines chunks while the engine produces ---------
+        t_first = [None]
+
+        def tap(stream, t0):
+            for ch in stream:
+                if t_first[0] is None:
+                    t_first[0] = time.perf_counter() - t0
+                yield ch
+
+        pump = RefinementPump(_refine_fn(per_pair_s),
+                              batch_pairs=_BATCH_PAIRS, max_queue_chunks=4)
+        t0 = time.perf_counter()
+        stream = get_engine(ename, **opts).evaluate_stream(
+            feats, clauses, thetas)
+        pr = pump.run(tap(stream, t0))
+        stream_total = time.perf_counter() - t0
+        totals["stream"] += stream_total
+        assert sorted(pr.candidates) == res.candidates, \
+            f"stream/batch candidate mismatch on {ename}"
+        rows.append({"engine": ename, "mode": "stream",
+                     "candidates": len(pr.candidates),
+                     "t_first_s": round(t_first[0], 4),
+                     "step2_wall": round(pr.stats.step2_wall, 4),
+                     "refine_wall": round(pr.stats.refine_wall, 4),
+                     "overlap_wall": round(pr.stats.overlap_wall, 4),
+                     "total_wall": round(stream_total, 4)})
+
+        for row in rows[-2:]:
+            print(f"pipeline,{row['engine']},{row['mode']},"
+                  f"candidates={row['candidates']},"
+                  f"t_first_s={row['t_first_s']},"
+                  f"step2_wall={row['step2_wall']},"
+                  f"refine_wall={row['refine_wall']},"
+                  f"overlap_wall={row['overlap_wall']},"
+                  f"total_wall={row['total_wall']}")
+        print(f"pipeline,{ename},speedup,"
+              f"total={barrier_total / max(stream_total, 1e-9):.2f}x,"
+              f"t_first={step2 / max(t_first[0], 1e-9):.2f}x")
+    print(f"pipeline,ALL,summary,"
+          f"stream_total={totals['stream']:.3f},"
+          f"barrier_total={totals['barrier']:.3f},"
+          f"streaming_wins={totals['stream'] <= totals['barrier']}")
+    rows.append({"engine": "ALL", "mode": "summary", **{
+        k + "_total": round(v, 4) for k, v in totals.items()}})
+    return rows
+
+
+def main(fast: bool):
+    from benchmarks.run import _emit
+    rows = run(fast)
+    _emit(rows, "pipeline")
+
+
+if __name__ == "__main__":
+    main(fast=True)

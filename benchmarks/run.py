@@ -179,6 +179,13 @@ def engine_bench(fast: bool):
     eb.main(fast)
 
 
+def pipeline_bench(fast: bool):
+    """Streaming candidate→refinement pipeline vs barrier: time-to-first-
+    candidate and total wall per backend (see DESIGN.md §5)."""
+    from benchmarks import pipeline as pb
+    pb.main(fast)
+
+
 ALL = {
     "table2": table2_guarantees,
     "table3": table3_cost_ratio,
@@ -188,6 +195,7 @@ ALL = {
     "fig10": fig10_characteristics,
     "kernels": kernel_bench,
     "engines": engine_bench,
+    "pipeline": pipeline_bench,
 }
 
 

@@ -1,10 +1,12 @@
 #!/usr/bin/env bash
-# CI gate: tier-1 test subset + a smoke benchmark on one small table.
+# CI gate: tier-1 test subset + smoke benchmarks on one small table.
 #
-#   tier-1:  python -m pytest -q -m "not slow"     (< 1 minute)
-#   smoke:   engine-comparison benchmark, fast sizes (DESIGN.md §5)
+#   tier-1:   python -m pytest -q -m "not slow"     (< 1 minute)
+#   smoke:    engine-comparison benchmark, fast sizes (DESIGN.md §5)
+#   pipeline: streaming-vs-barrier refinement overlap, fast sizes (§5)
 #
-# The slow suite (system joins, per-arch smoke tests) runs separately:
+# The slow suite (system joins, ≥50-trial guarantee sweep, per-arch smoke
+# tests) runs separately:
 #   python -m pytest -q -m slow
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -15,5 +17,8 @@ python -m pytest -q -m "not slow"
 
 echo "== smoke benchmark: step-2 engines on one small table =="
 python -m benchmarks.run --fast --only engines
+
+echo "== smoke benchmark: streaming refinement pipeline =="
+python -m benchmarks.run --fast --only pipeline
 
 echo "CI OK"

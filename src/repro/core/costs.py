@@ -33,6 +33,13 @@ class CostLedger:
     construction: float = 0.0    # featurization-generation LLM calls
     inference: float = 0.0       # feature extraction + embeddings
     refinement: float = 0.0      # LLM on predicted-positive pairs
+    # wall-clock accounting for the step-②/⑨ pipeline (DESIGN.md §3a):
+    # seconds, not dollars — reported via wall_summary(), kept out of the
+    # monetary breakdown().  overlap_wall > 0 only when stream_refinement
+    # actually ran refinement concurrently with candidate production.
+    step2_wall: float = 0.0      # candidate production (engine stream)
+    refine_wall: float = 0.0     # oracle refinement
+    overlap_wall: float = 0.0    # portion of the two that ran concurrently
 
     def charge_label(self, prompt_tokens: int, output_tokens: int = 1):
         self.labeling += (prompt_tokens * PRICE_JOIN_LLM_IN
@@ -52,6 +59,22 @@ class CostLedger:
 
     def charge_embedding(self, tokens: int):
         self.inference += tokens * PRICE_EMBED / 1e6
+
+    def record_walls(self, step2: float, refine: float, overlap: float):
+        self.step2_wall += step2
+        self.refine_wall += refine
+        self.overlap_wall += overlap
+
+    def wall_summary(self) -> dict:
+        """Pipeline wall seconds; pipelined_wall is the effective critical
+        path (step2 + refine - overlap) the streaming pump achieves."""
+        return {
+            "step2_wall": self.step2_wall,
+            "refine_wall": self.refine_wall,
+            "overlap_wall": self.overlap_wall,
+            "pipelined_wall": self.step2_wall + self.refine_wall
+            - self.overlap_wall,
+        }
 
     @property
     def total(self) -> float:

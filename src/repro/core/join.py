@@ -12,6 +12,12 @@
   9. refinement: oracle on Ŷ                  (cost: refinement) — precision 1
      (or Appx-C featurization-precision subsets when T_P < 1)
 
+With ``stream_refinement=True`` steps ⑧ and ⑨ are pipelined: the engine's
+``evaluate_stream`` emits per-chunk candidates that a ``RefinementPump``
+(core.refine) refines concurrently, so end-to-end wall approaches
+max(step ②, refinement) instead of their sum.  Output pairs and ledger
+totals are identical to barrier mode (tests/test_refine_pump.py).
+
 Evaluation (recall/precision vs ground truth) and the Fig-9 cost breakdown
 come back in ``JoinResult``.
 """
@@ -20,6 +26,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import time
 from typing import Callable, Optional, Sequence
 
 import numpy as np
@@ -29,6 +36,7 @@ from repro.core.adj_target import adj_target
 from repro.core.bargain import bargain_precision_subset
 from repro.core.costs import CostLedger
 from repro.core.featurize import FeaturizationSpec
+from repro.core.refine import RefinementPump
 from repro.core.scaffold import Scaffold, min_fpr_thresholds
 
 
@@ -46,6 +54,9 @@ class FDJConfig:
     mc_trials: int = 20000
     block: int = 4096              # L/R block edge for step-2 evaluation
     engine: str = "numpy"          # numpy | pallas | sharded (repro.engine)
+    stream_refinement: bool = False  # pipeline step ⑨ over step ②'s stream
+    refine_batch_pairs: int = 512  # oracle batch size inside the pump
+    pump_queue_chunks: int = 4     # bounded chunk queue (engine backpressure)
     seed: int = 0
 
 
@@ -133,23 +144,52 @@ def fdj_join(dataset, oracle, proposer, extractor, cfg: FDJConfig) -> JoinResult
         theta = np.zeros(0)
         feasible = False
 
+    # --- 8-9. candidate production + refinement --------------------------------
+    # degenerate scaffold: decomposition admits everything (always-sound)
+    degenerate = not feasible or not sc_local.n_clauses
     engine_stats = None
-    if not feasible or not sc_local.n_clauses:
-        # fall back: decomposition admits everything (always-sound)
-        candidates = [(i, j) for i in range(n_l) for j in range(n_r)]
+    if cfg.stream_refinement:
+        if degenerate:
+            chunk_iter = iter([_degenerate_chunk(n_l, n_r)])
+        else:
+            chunk_iter = _stream_cnf(extractor, used_specs, sc_local, theta,
+                                     ledger, cfg)
+        if cfg.precision_target >= 1.0:
+            def refine_chunk(batch):
+                labs = label(batch, "refinement")
+                return {p for p, l in zip(batch, labs) if l}
+            pump = RefinementPump(refine_chunk,
+                                  batch_pairs=cfg.refine_batch_pairs,
+                                  max_queue_chunks=cfg.pump_queue_chunks)
+        else:
+            # Appx C needs quantiles over the whole candidate set: the pump
+            # accumulates the stream and runs the ladder once at drain time
+            pump = RefinementPump(
+                final=lambda cands: _precision_extension(
+                    cands, used_specs, extractor, label, ledger, cfg, rng),
+                max_queue_chunks=cfg.pump_queue_chunks)
+        pr = pump.run(chunk_iter, ledger=ledger)
+        out_pairs = pr.pairs
+        cand_arr = pr.candidates
+        engine_stats = pr.engine_stats
     else:
-        candidates, engine_stats = _evaluate_cnf(extractor, used_specs,
-                                                 sc_local, theta, ledger, cfg)
-
-    # --- 9. refinement ---------------------------------------------------------
-    out_pairs: set = set()
-    cand_arr = list(candidates)
-    if cfg.precision_target >= 1.0:
-        labs = label(cand_arr, "refinement")
-        out_pairs = {p for p, l in zip(cand_arr, labs) if l}
-    else:
-        out_pairs = _precision_extension(cand_arr, used_specs, extractor, label,
-                                         ledger, cfg, rng)
+        if degenerate:
+            candidates = [(i, j) for i in range(n_l) for j in range(n_r)]
+        else:
+            candidates, engine_stats = _evaluate_cnf(extractor, used_specs,
+                                                     sc_local, theta, ledger,
+                                                     cfg)
+        out_pairs = set()
+        cand_arr = list(candidates)
+        t0 = time.perf_counter()
+        if cfg.precision_target >= 1.0:
+            labs = label(cand_arr, "refinement")
+            out_pairs = {p for p, l in zip(cand_arr, labs) if l}
+        else:
+            out_pairs = _precision_extension(cand_arr, used_specs, extractor,
+                                             label, ledger, cfg, rng)
+        ledger.record_walls(engine_stats.wall_s if engine_stats else 0.0,
+                            time.perf_counter() - t0, 0.0)
 
     truth = dataset.truth_set
     tp = len(out_pairs & truth)
@@ -179,6 +219,26 @@ def _evaluate_cnf(extractor, used_specs, sc: Scaffold, theta: np.ndarray,
     opts = {"block": cfg.block} if cfg.engine == "numpy" else {}
     res = get_engine(cfg.engine, **opts).evaluate(feats, sc.clauses, theta)
     return res.candidates, res.stats
+
+
+def _stream_cnf(extractor, used_specs, sc: Scaffold, theta: np.ndarray,
+                ledger: CostLedger, cfg: FDJConfig):
+    """Streaming step ②: same materialization/charges as ``_evaluate_cnf``
+    but hands back the engine's chunk iterator for the RefinementPump."""
+    from repro.engine import get_engine
+
+    feats = extractor.materialize(used_specs, ledger)
+    opts = {"block": cfg.block} if cfg.engine == "numpy" else {}
+    return get_engine(cfg.engine, **opts).evaluate_stream(
+        feats, sc.clauses, theta)
+
+
+def _degenerate_chunk(n_l: int, n_r: int):
+    """Refine-everything fallback as a single stream emission (stats-free,
+    mirroring the barrier fallback's engine_stats=None)."""
+    from repro.engine.base import CandidateChunk
+    pairs = [(i, j) for i in range(n_l) for j in range(n_r)]
+    return CandidateChunk(pairs, None, 0)
 
 
 def _precision_extension(cand_pairs, used_specs, extractor, label, ledger,

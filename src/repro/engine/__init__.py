@@ -6,7 +6,8 @@ point used by ``core.join``, ``launch.join`` and ``benchmarks.engines``.
 
 from __future__ import annotations
 
-from repro.engine.base import CnfEngine, EngineResult, EngineStats
+from repro.engine.base import (CandidateChunk, CnfEngine, EngineResult,
+                               EngineStats)
 
 ENGINES = ("numpy", "pallas", "sharded")
 
@@ -24,4 +25,5 @@ def get_engine(name: str, **opts) -> CnfEngine:
     raise ValueError(f"unknown engine {name!r}; expected one of {ENGINES}")
 
 
-__all__ = ["CnfEngine", "EngineResult", "EngineStats", "ENGINES", "get_engine"]
+__all__ = ["CandidateChunk", "CnfEngine", "EngineResult", "EngineStats",
+           "ENGINES", "get_engine"]

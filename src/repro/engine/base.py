@@ -25,6 +25,16 @@ Semantics contract (shared across backends, enforced here):
   * missing values are encoded inside the feature arrays (distance 1), so
     a clause whose features are all missing only passes when theta >= 1;
   * candidates are returned as a row-major-sorted list of (i, j) tuples.
+
+Streaming contract (DESIGN.md §3a): ``evaluate_stream`` yields
+``CandidateChunk``s incrementally as the backend scans the plane — the
+numpy/pallas backends emit one chunk per L-row block, the sharded backend
+one chunk per R-chunk scan step.  Chunks are pairwise disjoint, each
+chunk's candidates are row-major sorted *within* the chunk, and the sorted
+union over all chunks is bit-identical to ``evaluate().candidates``
+(``evaluate`` is literally a drain of the stream).  Downstream consumers
+(core.refine.RefinementPump) may start refining a chunk while the engine
+is still producing the next one.
 """
 
 from __future__ import annotations
@@ -32,7 +42,7 @@ from __future__ import annotations
 import abc
 import dataclasses
 import time
-from typing import Sequence
+from typing import Iterator, Sequence
 
 
 @dataclasses.dataclass
@@ -62,6 +72,19 @@ class EngineStats:
             "plane_bytes": self.plane_bytes,
         }
 
+    @classmethod
+    def merged(cls, deltas: Sequence["EngineStats"]) -> "EngineStats":
+        """Aggregate per-chunk stat deltas into whole-evaluation stats."""
+        deltas = [d for d in deltas if d is not None]
+        if not deltas:
+            return cls("none")
+        out = cls(deltas[0].engine, n_l=deltas[0].n_l, n_r=deltas[0].n_r)
+        for d in deltas:
+            out.n_candidates += d.n_candidates
+            out.wall_s += d.wall_s
+            out.bytes_to_host += d.bytes_to_host
+        return out
+
 
 @dataclasses.dataclass
 class EngineResult:
@@ -69,38 +92,77 @@ class EngineResult:
     stats: EngineStats
 
 
+@dataclasses.dataclass
+class CandidateChunk:
+    """One streamed emission of step ②: a disjoint slice of the candidate
+    set, sorted row-major within the chunk, plus the per-chunk stats delta
+    (wall seconds spent producing *this* chunk, bytes pulled for it)."""
+    candidates: list                   # sorted [(i, j), ...] for this chunk
+    stats: EngineStats                 # delta, not cumulative
+    index: int = 0                     # chunk ordinal in emission order
+
+
 class CnfEngine(abc.ABC):
-    """One step-② backend.  Subclasses implement ``_evaluate``."""
+    """One step-② backend.  Subclasses implement ``_evaluate_stream``."""
 
     name: str = "abstract"
 
     def evaluate(self, feats: Sequence, clauses: Sequence, thetas) -> EngineResult:
-        """feats: list of core.featurize.FeatureData (full corpus);
+        """Batch evaluation — a thin drain of ``evaluate_stream``.
+
+        feats: list of core.featurize.FeatureData (full corpus);
         clauses: CNF over feature indices; thetas: per-clause thresholds."""
+        t0 = time.perf_counter()
+        cands: list = []
+        chunks = list(self.evaluate_stream(feats, clauses, thetas))
+        for ch in chunks:
+            cands.extend(ch.candidates)
+        cands.sort()
+        stats = EngineStats.merged([ch.stats for ch in chunks])
+        stats.n_candidates = len(cands)
+        stats.wall_s = time.perf_counter() - t0
+        return EngineResult(cands, stats)
+
+    def evaluate_stream(self, feats: Sequence, clauses: Sequence,
+                        thetas) -> Iterator[CandidateChunk]:
+        """Yield disjoint ``CandidateChunk``s; sorted union ≡ ``evaluate``.
+
+        Per-chunk ``stats.wall_s`` measures engine time only: the clock
+        stops while the consumer holds the chunk, so a slow consumer does
+        not inflate step-② accounting."""
+        # validate eagerly (this is not itself a generator): a bad call
+        # raises here, at the call site, not at the consumer's first next()
         thetas = tuple(thetas)         # bind once: callers may pass iterators
         if len(clauses) != len(thetas):
             raise ValueError(
                 f"{len(clauses)} clauses but {len(thetas)} thresholds")
         n_l, n_r = corpus_shape(feats, clauses)
-        t0 = time.perf_counter()
+        return self._stream_checked(feats, clauses, thetas, n_l, n_r)
+
+    def _stream_checked(self, feats, clauses, thetas, n_l, n_r):
+        t_prev = time.perf_counter()
         if not clauses:
             # vacuous conjunction: admit everything without touching a backend
             cands = [(i, j) for i in range(n_l) for j in range(n_r)]
-            stats = EngineStats(self.name, n_l=n_l, n_r=n_r,
-                                n_candidates=len(cands),
-                                wall_s=time.perf_counter() - t0)
-            return EngineResult(cands, stats)
-        cands, bytes_to_host = self._evaluate(feats, clauses, thetas, n_l, n_r)
-        cands = sorted(cands)
-        stats = EngineStats(self.name, n_l=n_l, n_r=n_r,
-                            n_candidates=len(cands),
-                            wall_s=time.perf_counter() - t0,
-                            bytes_to_host=bytes_to_host)
-        return EngineResult(cands, stats)
+            yield CandidateChunk(
+                cands, EngineStats(self.name, n_l=n_l, n_r=n_r,
+                                   n_candidates=len(cands),
+                                   wall_s=time.perf_counter() - t_prev), 0)
+            return
+        for idx, (pairs, nbytes) in enumerate(
+                self._evaluate_stream(feats, clauses, thetas, n_l, n_r)):
+            pairs = sorted(pairs)
+            yield CandidateChunk(
+                pairs, EngineStats(self.name, n_l=n_l, n_r=n_r,
+                                   n_candidates=len(pairs),
+                                   wall_s=time.perf_counter() - t_prev,
+                                   bytes_to_host=nbytes), idx)
+            t_prev = time.perf_counter()
 
     @abc.abstractmethod
-    def _evaluate(self, feats, clauses, thetas, n_l: int, n_r: int):
-        """Returns (candidates, bytes_to_host)."""
+    def _evaluate_stream(self, feats, clauses, thetas, n_l: int, n_r: int):
+        """Yields (pairs, bytes_to_host) per backend-defined chunk; chunks
+        must be disjoint and together cover the exact candidate set."""
 
 
 def corpus_shape(feats: Sequence, clauses: Sequence) -> tuple:

@@ -5,8 +5,12 @@ This is the loop that used to live inline in ``core/join.py``: iterate
 ``FeatureData.distance_block``, AND the per-clause passes, and collect the
 surviving indices.  Early exit when a block's conjunction empties.
 
+Streaming: one ``CandidateChunk`` per L-row block (the outer loop), each
+covering that row strip across all of R — so chunks arrive row-major
+sorted and globally ordered.
+
 It is the semantic oracle for the other backends — every engine must match
-its candidate set exactly (tests/test_engines.py).
+its candidate set exactly (tests/test_engines.py, tests/test_streaming.py).
 """
 
 from __future__ import annotations
@@ -22,12 +26,12 @@ class NumpyEngine(CnfEngine):
     def __init__(self, block: int = 4096):
         self.block = int(block)
 
-    def _evaluate(self, feats, clauses, thetas, n_l, n_r):
+    def _evaluate_stream(self, feats, clauses, thetas, n_l, n_r):
         block = self.block
         theta = np.asarray(thetas, np.float64)
-        out = []
         for i0 in range(0, n_l, block):
             il = np.arange(i0, min(i0 + block, n_l))
+            out = []
             for j0 in range(0, n_r, block):
                 jr = np.arange(j0, min(j0 + block, n_r))
                 ok = None
@@ -44,5 +48,5 @@ class NumpyEngine(CnfEngine):
                     continue
                 ii, jj = np.nonzero(ok)
                 out.extend(zip((il[ii]).tolist(), (jr[jj]).tolist()))
-        # host-resident compute: no device->host candidate traffic
-        return out, 0
+            # host-resident compute: no device->host candidate traffic
+            yield out, 0

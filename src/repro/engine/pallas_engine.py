@@ -1,10 +1,15 @@
 """Single-device Pallas backend.
 
-Thin wrapper over ``kernels.fused_cnf_join.ops.evaluate_corpus``: the fused
-kernel grids over the padded (n_l, n_r) plane, writes the packed uint32
-bitmask, and the *whole mask* is pulled to the host and unpacked there —
-host traffic is O(n_l · n_r / 8).  Fine for one device and modest corpora;
-the sharded backend exists for everything bigger.
+Thin wrapper over ``kernels.fused_cnf_join.ops``: the fused kernel grids
+over the padded (n_l, n_r) plane, writes the packed uint32 bitmask, and
+the mask is pulled to the host and unpacked there — host traffic is
+O(n_l · n_r / 8).  Fine for one device and modest corpora; the sharded
+backend exists for everything bigger.
+
+Streaming: the kernel runs one ``l_block``-row strip at a time
+(``ops.evaluate_corpus_stream``), yielding a ``CandidateChunk`` per strip
+— same total mask traffic, but candidates for early rows reach the
+refinement pump while later strips are still gridding.
 """
 
 from __future__ import annotations
@@ -18,14 +23,19 @@ class PallasEngine(CnfEngine):
     name = "pallas"
 
     def __init__(self, tl: int = 256, tr: int = 512,
-                 interpret: Optional[bool] = None):
+                 interpret: Optional[bool] = None,
+                 l_block: Optional[int] = None):
+        """l_block: rows per streamed chunk (multiple of tl; default 4*tl)."""
         self.tl = int(tl)
         self.tr = int(tr)
         self.interpret = interpret
+        self.l_block = int(l_block) if l_block else 4 * self.tl
+        if self.l_block % self.tl != 0:
+            raise ValueError(
+                f"l_block={self.l_block} must be a multiple of tl={tl}")
 
-    def _evaluate(self, feats, clauses, thetas, n_l, n_r):
+    def _evaluate_stream(self, feats, clauses, thetas, n_l, n_r):
         from repro.kernels.fused_cnf_join import ops as cnf_ops
-        pairs, mask_bytes = cnf_ops.evaluate_corpus(
+        yield from cnf_ops.evaluate_corpus_stream(
             feats, clauses, thetas, tl=self.tl, tr=self.tr,
-            interpret=self.interpret, return_mask_bytes=True)
-        return pairs, mask_bytes
+            l_block=self.l_block, interpret=self.interpret)

@@ -5,20 +5,27 @@ Layout (see DESIGN.md §3):
   * L rows are sharded over the mesh's "data" axis — each device owns a
     contiguous block of ``rows_shard = padded_n_l / n_dev`` rows (embedding
     and scalar planes sliced with ``P(None, "data", ...)``);
-  * R is replicated and *streamed*: a ``lax.scan`` walks R in chunks of
+  * R is replicated and *streamed*: a host loop walks R in chunks of
     ``r_chunk`` rows, so device-resident working state is
     O(rows_shard · r_chunk), never O(rows_shard · n_r);
   * per chunk the fused CNF Pallas kernel produces the packed uint32 mask
     (grid = rows_shard/tl × r_chunk/tr tiles), which is immediately
-    compacted on-device into the running (i, j) candidate buffer via
+    compacted on-device into a per-chunk (i, j) candidate buffer via
     popcount + prefix-sum (engine.extract) — the mask never leaves HBM;
-  * the host pulls one int32 count per device plus the first ``count``
-    buffer rows: O(candidates) transfer instead of the O(n_l·n_r) plane.
+  * after **each** chunk the host pulls one int32 count per device plus
+    the first ``count`` buffer rows (``jax.device_get``) and *emits* the
+    chunk's global pairs downstream: O(candidates) transfer total, and the
+    first candidates surface after one scan step instead of after the
+    whole R sweep.  Batch ``evaluate`` is a drain of this same stream.
+
+Each chunk is L-complete (all devices' row blocks × one R column band),
+so chunks partition the candidate set by R columns — disjoint by
+construction, sorted within the chunk by ``base.evaluate_stream``.
 
 Capacity is bounded-and-retried, never silently truncated: the on-device
-count keeps growing past the buffer, the host detects overflow and reruns
-with a 4× buffer.  Padded rows/cols (tile alignment) are filtered on the
-host — O(candidates) work.
+count keeps growing past the buffer, the host detects overflow per chunk
+and reruns *that chunk* with a ≥4× buffer.  Padded rows/cols (tile
+alignment) are filtered on the host — O(candidates) work.
 
 On CPU the kernel runs in interpret mode on a 1-device "data" mesh, so the
 same code path is exercised by tests; on a pod the identical program lowers
@@ -61,9 +68,9 @@ class ShardedEngine(CnfEngine):
         """mesh: any mesh with a "data" axis (default: make_host_mesh()).
         tl/tr: kernel tile edges (tr % 32 == 0).  r_chunk: R stream chunk
         (multiple of tr; default 4*tr).  capacity: initial per-device
-        candidate buffer (default heuristic, grows 4x on overflow).
-        use_kernel=False swaps the Pallas kernel for the jnp reference —
-        identical math, faster under CPU emulation."""
+        per-chunk candidate buffer (default heuristic, grows >=4x on
+        overflow).  use_kernel=False swaps the Pallas kernel for the jnp
+        reference — identical math, faster under CPU emulation."""
         if tr % 32 != 0:
             raise ValueError(f"tr={tr} must be a multiple of 32 (packed mask)")
         self.mesh = mesh
@@ -86,67 +93,60 @@ class ShardedEngine(CnfEngine):
 
     # -- device program -----------------------------------------------------
 
-    def _build(self, mesh, kclauses, thetas, rows_shard, pr_n, cap):
+    def _build(self, mesh, kclauses, thetas, rows_shard, cap):
         # jax.jit caches on function identity; without memoizing here every
-        # evaluate() would re-trace and re-compile an identical program.
-        # The key carries every value the closure bakes in.
+        # chunk step would re-trace and re-compile an identical program.
+        # The key carries every value the closure bakes in (the chunk index
+        # is a traced argument, so one program serves the whole R sweep).
         interpret = self.interpret
         if interpret is None:
             interpret = jax.default_backend() == "cpu"
-        key = (mesh, kclauses, thetas, rows_shard, pr_n, cap,
+        key = (mesh, kclauses, thetas, rows_shard, cap,
                self.tl, self.tr, self.r_chunk, self.use_kernel, interpret)
         cached = ShardedEngine._programs.get(key)
         if cached is not None:
             return cached
-        fn = self._build_uncached(mesh, kclauses, thetas, rows_shard, pr_n,
-                                  cap, interpret)
+        fn = self._build_uncached(mesh, kclauses, thetas, rows_shard, cap,
+                                  interpret)
         while len(ShardedEngine._programs) >= self._PROGRAM_CACHE_MAX:
             ShardedEngine._programs.pop(next(iter(ShardedEngine._programs)))
         ShardedEngine._programs[key] = fn
         return fn
 
-    def _build_uncached(self, mesh, kclauses, thetas, rows_shard, pr_n, cap,
+    def _build_uncached(self, mesh, kclauses, thetas, rows_shard, cap,
                         interpret):
         from repro.kernels.fused_cnf_join import ref as cref
         from repro.kernels.fused_cnf_join.kernel import cnf_join_block
-        n_chunks = pr_n // self.r_chunk
         tl, tr, r_chunk = self.tl, self.tr, self.r_chunk
         use_kernel = self.use_kernel
 
-        def body(emb_l, emb_r, scal_l, scal_r):
+        def body(emb_l, emb_r, scal_l, scal_r, k):
             row0 = lax.axis_index("data") * rows_shard
-
-            def step(carry, k):
-                buf, cnt = carry
-                erk = lax.dynamic_slice_in_dim(emb_r, k * r_chunk, r_chunk, axis=1)
-                srk = lax.dynamic_slice_in_dim(scal_r, k * r_chunk, r_chunk, axis=1)
-                if use_kernel:
-                    packed = cnf_join_block(emb_l, erk, scal_l, srk, kclauses,
-                                            thetas, tl=tl, tr=tr,
-                                            interpret=interpret)
-                else:
-                    packed = cref.pack_mask(cref.cnf_join_ref(
-                        emb_l, erk, scal_l, srk, kclauses, thetas))
-                buf, cnt = extract.compact_append(
-                    packed, buf, cnt, row_offset=row0,
-                    col_offset=k * r_chunk)
-                return (buf, cnt), None
-
-            init = (jnp.full((cap, 2), -1, jnp.int32), jnp.zeros((), jnp.int32))
-            (buf, cnt), _ = lax.scan(step, init, jnp.arange(n_chunks))
+            erk = lax.dynamic_slice_in_dim(emb_r, k * r_chunk, r_chunk, axis=1)
+            srk = lax.dynamic_slice_in_dim(scal_r, k * r_chunk, r_chunk, axis=1)
+            if use_kernel:
+                packed = cnf_join_block(emb_l, erk, scal_l, srk, kclauses,
+                                        thetas, tl=tl, tr=tr,
+                                        interpret=interpret)
+            else:
+                packed = cref.pack_mask(cref.cnf_join_ref(
+                    emb_l, erk, scal_l, srk, kclauses, thetas))
+            buf, cnt = extract.extract_pairs(packed, capacity=cap,
+                                             row_offset=row0,
+                                             col_offset=k * r_chunk)
             return buf, cnt[None]
 
         fn = shard_map(
             body, mesh=mesh,
             in_specs=(P(None, "data", None), P(None, None, None),
-                      P(None, "data"), P(None, None)),
+                      P(None, "data"), P(None, None), P()),
             out_specs=(P("data", None), P("data")),
             check_rep=False)   # pallas_call has no replication rule
         return jax.jit(fn)
 
     # -- evaluation ---------------------------------------------------------
 
-    def _evaluate(self, feats, clauses, thetas, n_l, n_r):
+    def _evaluate_stream(self, feats, clauses, thetas, n_l, n_r):
         from repro.kernels.fused_cnf_join import ops as cnf_ops
 
         if self.mesh is None:
@@ -162,33 +162,37 @@ class ShardedEngine(CnfEngine):
             feats, clauses, tl=ndev * self.tl, tr=self.r_chunk)
         pl_n, pr_n = emb_l.shape[1], emb_r.shape[1]
         rows_shard = pl_n // ndev
+        n_chunks = pr_n // self.r_chunk
         args = (jnp.asarray(emb_l), jnp.asarray(emb_r),
                 jnp.asarray(scal_l), jnp.asarray(scal_r))
         thetas = tuple(float(t) for t in thetas)
 
         cap = self.capacity or max(4096, 4 * rows_shard)
-        while True:
-            fn = self._build(mesh, kclauses, thetas, rows_shard, pr_n, cap)
-            buf, cnt = fn(*args)
-            counts = np.asarray(jax.device_get(cnt))
-            if (counts <= cap).all():
-                break
-            # counts are exact true totals (compact_append never clamps), so
-            # one retry sized to the max always suffices
-            cap = -(-int(max(counts)) // 1024) * 1024
-        self.capacity = cap            # start here next time: no repeat retry
-        bytes_to_host = counts.nbytes
-        out = []
-        for d in range(ndev):
-            take = int(counts[d])
-            if not take:
+        for k in range(n_chunks):
+            while True:
+                fn = self._build(mesh, kclauses, thetas, rows_shard, cap)
+                buf, cnt = fn(*args, jnp.int32(k))
+                counts = np.asarray(jax.device_get(cnt))
+                if (counts <= cap).all():
+                    break
+                # counts are exact true totals (extract never clamps), so one
+                # retry of this chunk sized >=4x (and >= the true max) suffices
+                cap = max(4 * cap, -(-int(max(counts)) // 1024) * 1024)
+            self.capacity = cap        # start here next chunk: no repeat retry
+            bytes_to_host = counts.nbytes
+            out = []
+            for d in range(ndev):
+                take = int(counts[d])
+                if not take:
+                    continue
+                seg = np.asarray(buf[d * cap: d * cap + take])  # O(cands) pull
+                bytes_to_host += seg.nbytes
+                out.append(seg)
+            if not out:
+                yield [], bytes_to_host
                 continue
-            seg = np.asarray(buf[d * cap: d * cap + take])   # O(candidates) pull
-            bytes_to_host += seg.nbytes
-            out.append(seg)
-        if not out:
-            return [], bytes_to_host
-        pairs = np.concatenate(out, axis=0)
-        keep = (pairs[:, 0] < n_l) & (pairs[:, 1] < n_r)     # drop tile padding
-        pairs = pairs[keep]
-        return list(zip(pairs[:, 0].tolist(), pairs[:, 1].tolist())), bytes_to_host
+            pairs = np.concatenate(out, axis=0)
+            keep = (pairs[:, 0] < n_l) & (pairs[:, 1] < n_r)    # drop padding
+            pairs = pairs[keep]
+            yield (list(zip(pairs[:, 0].tolist(), pairs[:, 1].tolist())),
+                   bytes_to_host)

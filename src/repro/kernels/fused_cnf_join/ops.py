@@ -16,6 +16,7 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
 
 from repro.kernels.fused_cnf_join import ref
 from repro.kernels.fused_cnf_join.kernel import SCAL, VEC, cnf_join_block
@@ -89,18 +90,48 @@ def evaluate_corpus(feats: Sequence, clauses: Sequence, thetas,
     With ``return_mask_bytes=True`` also returns the device->host transfer
     size of the packed mask (the quantity the sharded engine eliminates).
     """
+    pairs: list = []
+    mask_bytes = 0
+    for block_pairs, nbytes in evaluate_corpus_stream(
+            feats, clauses, thetas, tl=tl, tr=tr, l_block=None,
+            interpret=interpret):
+        pairs.extend(block_pairs)
+        mask_bytes += nbytes
+    if return_mask_bytes:
+        return pairs, mask_bytes
+    return pairs
+
+
+def evaluate_corpus_stream(feats: Sequence, clauses: Sequence, thetas,
+                           *, tl: int = 256, tr: int = 512,
+                           l_block=None, interpret=None):
+    """Streaming corpus driver: yields (pairs, mask_bytes) per L-row block.
+
+    Features are packed once; the kernel then grids one ``l_block``-row
+    strip at a time (``l_block`` a multiple of ``tl``, default one whole
+    pass — i.e. batch semantics).  Each strip's packed mask is pulled and
+    unpacked immediately, so candidates for early rows reach the consumer
+    while later strips are still on the device.
+    """
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     emb_l, emb_r, scal_l, scal_r, kclauses, n_l, n_r = pack_features(
         feats, clauses, tl=tl, tr=tr)
-    packed = cnf_join_block(
-        jnp.asarray(emb_l), jnp.asarray(emb_r), jnp.asarray(scal_l),
-        jnp.asarray(scal_r), kclauses, tuple(float(t) for t in thetas),
-        tl=tl, tr=tr, interpret=interpret)
-    host_mask = np.asarray(packed)                  # O(n_l * n_r / 8) pull
-    ok = ref.unpack_mask(host_mask, emb_r.shape[1])[:n_l, :n_r]
-    ii, jj = np.nonzero(ok)
-    pairs = list(zip(ii.tolist(), jj.tolist()))
-    if return_mask_bytes:
-        return pairs, host_mask.nbytes
-    return pairs
+    pl_n, pr_n = emb_l.shape[1], emb_r.shape[1]
+    if l_block is None:
+        l_block = pl_n
+    if l_block % tl != 0:
+        raise ValueError(f"l_block={l_block} must be a multiple of tl={tl}")
+    thetas = tuple(float(t) for t in thetas)
+    demb_l, demb_r = jnp.asarray(emb_l), jnp.asarray(emb_r)
+    dscal_l, dscal_r = jnp.asarray(scal_l), jnp.asarray(scal_r)
+    for i0 in range(0, pl_n, l_block):
+        rows = min(l_block, pl_n - i0)
+        packed = cnf_join_block(
+            lax.slice_in_dim(demb_l, i0, i0 + rows, axis=1), demb_r,
+            lax.slice_in_dim(dscal_l, i0, i0 + rows, axis=1), dscal_r,
+            kclauses, thetas, tl=tl, tr=tr, interpret=interpret)
+        host_mask = np.asarray(packed)              # O(rows * n_r / 8) pull
+        ok = ref.unpack_mask(host_mask, pr_n)[: max(n_l - i0, 0), :n_r]
+        ii, jj = np.nonzero(ok)
+        yield list(zip((ii + i0).tolist(), jj.tolist())), host_mask.nbytes

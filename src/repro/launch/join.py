@@ -25,7 +25,8 @@ from repro.engine import ENGINES
 
 def run_join(dataset: str = "police_records", target: float = 0.9,
              delta: float = 0.1, precision_target: float = 1.0,
-             engine: str = "numpy", size: float = 1.0, seed: int = 0) -> dict:
+             engine: str = "numpy", size: float = 1.0, seed: int = 0,
+             stream: bool = False) -> dict:
     gens = {
         "police_records": lambda: synth.police_records(
             n_incidents=int(300 * size), reports_per_incident=3, seed=seed),
@@ -38,7 +39,8 @@ def run_join(dataset: str = "police_records", target: float = 0.9,
     ds = gens[dataset]()
     oracle = ds.make_oracle()
     cfg = FDJConfig(recall_target=target, delta=delta, engine=engine,
-                    precision_target=precision_target, seed=seed)
+                    precision_target=precision_target, seed=seed,
+                    stream_refinement=stream)
     res = fdj_join(ds, oracle, SimulatedProposer(ds), SimulatedExtractor(ds, seed=seed), cfg)
     naive = naive_join_cost(ds.texts_l, ds.texts_r)
     return {
@@ -52,6 +54,8 @@ def run_join(dataset: str = "police_records", target: float = 0.9,
         "cost_ratio": round(res.cost.total / naive, 4),
         "breakdown": {k: round(v / naive, 4) for k, v in res.cost.breakdown().items()},
         "engine": (res.engine_stats.as_dict() if res.engine_stats else None),
+        "stream_refinement": stream,
+        "walls": {k: round(v, 4) for k, v in res.cost.wall_summary().items()},
     }
 
 
@@ -96,11 +100,15 @@ def main():
     ap.add_argument("--delta", type=float, default=0.1)
     ap.add_argument("--precision-target", type=float, default=1.0)
     ap.add_argument("--engine", default="numpy", choices=list(ENGINES))
+    ap.add_argument("--stream", action="store_true",
+                    help="pipeline refinement over the step-② candidate "
+                         "stream (FDJConfig.stream_refinement)")
     ap.add_argument("--size", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     out = run_join(args.dataset, args.target, args.delta,
-                   args.precision_target, args.engine, args.size, args.seed)
+                   args.precision_target, args.engine, args.size, args.seed,
+                   stream=args.stream)
     print(json.dumps(out, indent=1))
 
 

@@ -114,6 +114,28 @@ def test_sharded_capacity_overflow_is_retried_not_truncated():
         feats, [[0]], [0.5]).candidates
 
 
+def test_sharded_capacity_one_forces_retry_on_every_chunk():
+    """Worst-case fixture: capacity=1 overflows on every R chunk; the >=4x
+    retry rule must recover the complete candidate set in both batch and
+    streaming modes, with no chunk silently truncated."""
+    n = 33                                     # ragged vs tl/tr/r_chunk
+    spec = FeaturizationSpec("name", "", "word_overlap", "llm", "name")
+    feats = [vectorize(spec, ["same text"] * n, ["same text"] * n)]
+    want = [(i, j) for i in range(n) for j in range(n)]
+
+    eng = get_engine("sharded", tl=32, tr=32, r_chunk=32, capacity=1)
+    res = eng.evaluate(feats, [[0]], [0.5])
+    assert res.candidates == want
+    assert eng.capacity >= 4                   # grew by >=4x, never clamped
+
+    eng2 = get_engine("sharded", tl=32, tr=32, r_chunk=32, capacity=1)
+    chunks = list(eng2.evaluate_stream(feats, [[0]], [0.5]))
+    assert len(chunks) == 2                    # padded R = 64 -> two chunks
+    for ch in chunks:                          # each chunk complete, counted
+        assert len(ch.candidates) == ch.stats.n_candidates > 0
+    assert sorted(p for ch in chunks for p in ch.candidates) == want
+
+
 def test_sharded_host_bytes_scale_with_candidates():
     """Acceptance: sharded transfer is O(candidates), not O(n_l*n_r)."""
     ds = synth.police_records(n_incidents=50, reports_per_incident=2, seed=3)

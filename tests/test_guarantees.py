@@ -1,0 +1,62 @@
+"""The paper's headline guarantee, tested directly: over repeated seeded
+runs, ``fdj_join`` achieves recall >= recall_target with failure rate <= δ
+(Thm — recall w.h.p.), in both barrier and streaming-refinement modes.
+
+Tier-1 runs a 5-trial smoke (alternating modes); the ≥50-trial statistical
+sweep over two synth datasets is marked ``slow`` (scripts/ci.sh runs
+tier-1 only; ``pytest -m slow`` runs the sweep).
+"""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.join import FDJConfig, fdj_join
+from repro.data import synth
+from repro.data.simulated_llm import SimulatedExtractor, SimulatedProposer
+
+TARGET, DELTA = 0.9, 0.1
+
+_DATASETS = {
+    "biodex": lambda seed: synth.biodex(n_notes=150, n_terms=40, seed=seed),
+    "police": lambda seed: synth.police_records(
+        n_incidents=35, reports_per_incident=2, seed=seed),
+}
+
+
+def _trial(mk_ds, seed: int, stream: bool) -> float:
+    ds = mk_ds(seed)
+    cfg = FDJConfig(recall_target=TARGET, delta=DELTA, seed=seed,
+                    mc_trials=5000, stream_refinement=stream)
+    res = fdj_join(ds, ds.make_oracle(), SimulatedProposer(ds),
+                   SimulatedExtractor(ds, seed=seed), cfg)
+    return res.recall
+
+
+def test_recall_guarantee_smoke():
+    """Tier-1: 5 trials alternating barrier/stream; at δ=0.1, more than one
+    failure among five would put the guarantee far outside its budget."""
+    fails = 0
+    for seed in range(5):
+        r = _trial(_DATASETS["biodex"], seed, stream=bool(seed % 2))
+        fails += int(r < TARGET)
+    assert fails <= 1, f"{fails}/5 trials missed recall target {TARGET}"
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("stream", [False, True], ids=["barrier", "stream"])
+def test_recall_guarantee_sweep(stream):
+    """≥50 trials across two dataset families: observed failure rate must
+    stay within δ plus two-sigma binomial slack, and mean recall >= T."""
+    recalls = []
+    for name, mk in _DATASETS.items():
+        for seed in range(25):
+            recalls.append(_trial(mk, seed, stream))
+    trials = len(recalls)
+    assert trials >= 50
+    fails = sum(r < TARGET for r in recalls)
+    slack = 2.0 * math.sqrt(DELTA * (1.0 - DELTA) / trials)
+    assert fails / trials <= DELTA + slack, (
+        f"failure rate {fails}/{trials} exceeds δ={DELTA} (+{slack:.3f} slack)")
+    assert float(np.mean(recalls)) >= TARGET

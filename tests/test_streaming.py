@@ -1,0 +1,135 @@
+"""Streaming-vs-batch parity for every step-② backend.
+
+The streaming contract (engine/base.py, DESIGN.md §3a): chunks are
+pairwise disjoint, sorted within the chunk, and their sorted union is
+bit-identical to ``evaluate().candidates`` — for ragged corpus sizes, the
+empty scaffold, an all-missing feature column, and the sharded backend's
+overflow-retry path.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.costs import CostLedger
+from repro.core.featurize import FeaturizationSpec, vectorize
+from repro.data.cnf_fixtures import representative_cnf
+from repro.data.simulated_llm import SimulatedExtractor
+from repro.data import synth
+from repro.engine import ENGINES, get_engine
+from repro.engine.base import CandidateChunk
+
+# small tiles: keep interpret-mode pallas fast; ragged sizes exercise
+# padding; l_block/block/r_chunk chosen so every backend emits >1 chunk
+_OPTS = {
+    "numpy": dict(block=32),
+    "pallas": dict(tl=32, tr=64, l_block=32),
+    "sharded": dict(tl=32, tr=32, r_chunk=64),
+}
+
+
+def _assert_stream_matches_batch(name, feats, clauses, thetas, opts=None):
+    opts = opts if opts is not None else _OPTS[name]
+    chunks = list(get_engine(name, **opts).evaluate_stream(
+        feats, clauses, thetas))
+    batch = get_engine(name, **opts).evaluate(feats, clauses, thetas)
+    union = [p for ch in chunks for p in ch.candidates]
+    assert len(union) == len(set(union)), f"{name}: chunks overlap"
+    assert sorted(union) == batch.candidates, (
+        f"{name}: union of {len(chunks)} chunks != batch candidates")
+    for ch in chunks:
+        assert isinstance(ch, CandidateChunk)
+        assert ch.candidates == sorted(ch.candidates), (
+            f"{name}: chunk {ch.index} not sorted")
+        assert ch.stats.n_candidates == len(ch.candidates)
+    assert [ch.index for ch in chunks] == list(range(len(chunks)))
+    # byte accounting decomposes over chunks (evaluate is a drain)
+    assert sum(ch.stats.bytes_to_host for ch in chunks) \
+        == batch.stats.bytes_to_host
+    return chunks, batch
+
+
+def _materialized_cnf(ds):
+    specs, clauses, thetas = representative_cnf(ds)
+    feats = SimulatedExtractor(ds).materialize(specs, CostLedger())
+    return feats, clauses, thetas
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("mk_ds", [
+    # 74 x 74: not a multiple of any tile edge -> padding exercised
+    lambda: synth.police_records(n_incidents=37, reports_per_incident=2,
+                                 seed=5),
+    # 101 x 101: ragged on both sides for tr=64 / r_chunk=64
+    lambda: synth.citations(n_docs=101, seed=9),
+], ids=["police_ragged", "citations_ragged"])
+def test_stream_parity_on_synth_datasets(engine, mk_ds):
+    ds = mk_ds()
+    feats, clauses, thetas = _materialized_cnf(ds)
+    chunks, batch = _assert_stream_matches_batch(engine, feats, clauses,
+                                                 thetas)
+    assert batch.stats.n_candidates > 0          # non-degenerate join
+    assert len(chunks) > 1, f"{engine}: expected multiple chunks"
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_stream_parity_empty_scaffold(engine):
+    """Zero clauses = vacuous conjunction: the stream emits every pair."""
+    ds = synth.police_records(n_incidents=10, reports_per_incident=2, seed=1)
+    feats, _, _ = _materialized_cnf(ds)
+    chunks, batch = _assert_stream_matches_batch(engine, feats, [], [])
+    assert len(batch.candidates) == ds.n_l * ds.n_r
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_stream_parity_all_missing_feature_column(engine):
+    """A featurization that failed on every record streams no candidates."""
+    n_l, n_r = 41, 53                            # ragged on purpose
+    vals_l = [f"item {i % 7}" for i in range(n_l)]
+    vals_r = [f"item {i % 7}" for i in range(n_r)]
+    ok_spec = FeaturizationSpec("name", "", "word_overlap", "llm", "name")
+    dead_spec = FeaturizationSpec("dead", "", "semantic", "llm", "dead")
+    feats = [vectorize(ok_spec, vals_l, vals_r),
+             vectorize(dead_spec, [None] * n_l, [None] * n_r)]
+
+    # dead feature alone: every chunk is empty
+    chunks, batch = _assert_stream_matches_batch(engine, feats, [[1]], [0.9])
+    assert batch.candidates == []
+
+    # disjunction with a live feature: stream matches the live-only stream
+    _, dis = _assert_stream_matches_batch(engine, feats, [[0, 1]], [0.3])
+    _, live = _assert_stream_matches_batch(engine, feats, [[0]], [0.3])
+    assert dis.candidates == live.candidates
+    assert len(dis.candidates) > 0
+
+
+def test_sharded_stream_overflow_retry():
+    """An undersized per-chunk buffer must grow (>=4x) mid-stream and the
+    union must still be the complete candidate set — no truncated chunk."""
+    n = 40
+    spec = FeaturizationSpec("name", "", "word_overlap", "llm", "name")
+    # every pair matches: per-chunk candidates >> tiny initial capacity
+    feats = [vectorize(spec, ["same text"] * n, ["same text"] * n)]
+    opts = dict(tl=32, tr=32, r_chunk=32, capacity=8)
+    eng = get_engine("sharded", **opts)
+    chunks = list(eng.evaluate_stream(feats, [[0]], [0.5]))
+    assert eng.capacity >= 4 * 8                 # the >=4x growth rule
+    union = sorted(p for ch in chunks for p in ch.candidates)
+    assert union == [(i, j) for i in range(n) for j in range(n)]
+    for ch in chunks:                            # no chunk silently truncated
+        assert len(ch.candidates) == ch.stats.n_candidates
+
+
+def test_stream_wall_clock_excludes_consumer_time():
+    """Per-chunk wall measures engine time only: a slow consumer must not
+    inflate step-② accounting (the pump relies on this split)."""
+    import time
+    ds = synth.police_records(n_incidents=20, reports_per_incident=2, seed=2)
+    feats, clauses, thetas = _materialized_cnf(ds)
+    stream = get_engine("numpy", block=8).evaluate_stream(
+        feats, clauses, thetas)
+    walls = []
+    for ch in stream:
+        walls.append(ch.stats.wall_s)
+        time.sleep(0.05)                         # consumer stalls 50 ms/chunk
+    assert len(walls) > 1
+    assert sum(walls) < 0.05                     # engine time stays its own
