@@ -61,7 +61,8 @@ def run_fdj(ds, target: float = 0.9, delta: float = 0.1, seed: int = 0,
     res = fdj_join(ds, oracle, prop, ext, cfg)
     return _metrics(ds, res.pairs, res.cost, extra={
         "t_prime": res.t_prime, "clauses": res.scaffold.clauses,
-        "candidates": res.candidate_count, "wall_s": time.time() - t0})
+        "candidates": res.candidate_count, "wall_s": time.time() - t0,
+        "serving": res.cost.serving_summary()})
 
 
 def run_bargain(ds, target: float = 0.9, delta: float = 0.1, seed: int = 0,

@@ -131,11 +131,14 @@ def fig9_breakdown(fast: bool):
         for t in targets:
             ds = mk()
             r = bl.run_fdj(ds, target=t)
-            row = {"dataset": name, "target": t, **{
-                k: 100 * v for k, v in r["breakdown"].items()}}
+            row = {"dataset": name, "target": t,
+                   **{k: 100 * v for k, v in r["breakdown"].items()},
+                   **r.get("serving", {})}
             rows.append(row)
             print(f"fig9,{name},T={t}," + ",".join(
-                f"{k}={100*v:.2f}" for k, v in r["breakdown"].items()))
+                f"{k}={100*v:.2f}" for k, v in r["breakdown"].items())
+                + "," + ",".join(f"{k}={v}"
+                                 for k, v in r.get("serving", {}).items()))
     _emit(rows, "fig9")
 
 
@@ -174,16 +177,24 @@ def kernel_bench(fast: bool):
 
 def engine_bench(fast: bool):
     """Step-② engine comparison: wall-clock + bytes-to-host per backend
-    (numpy / pallas / sharded; see DESIGN.md §5)."""
+    (numpy / pallas / sharded; see DESIGN.md §6)."""
     from benchmarks import engines as eb
     eb.main(fast)
 
 
 def pipeline_bench(fast: bool):
     """Streaming candidate→refinement pipeline vs barrier: time-to-first-
-    candidate and total wall per backend (see DESIGN.md §5)."""
+    candidate and total wall per backend (see DESIGN.md §6)."""
     from benchmarks import pipeline as pb
     pb.main(fast)
+
+
+def serving_bench(fast: bool):
+    """Join-serving regime: cold vs warm vs delta-append through the
+    FeaturePlaneStore — asserts the warm path charges zero extraction and
+    moves zero plane bytes to device (see DESIGN.md §4)."""
+    from benchmarks import serving as sv
+    sv.main(fast)
 
 
 ALL = {
@@ -196,6 +207,7 @@ ALL = {
     "kernels": kernel_bench,
     "engines": engine_bench,
     "pipeline": pipeline_bench,
+    "serving": serving_bench,
 }
 
 
@@ -203,6 +215,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
     ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--strict", action="store_true",
+                    help="re-raise regime failures (CI gates, e.g. the "
+                         "serving warm-path zero-extraction assertion)")
     args = ap.parse_args()
     only = [s for s in args.only.split(",") if s]
     t0 = time.time()
@@ -211,10 +226,12 @@ def main() -> None:
             continue
         try:
             fn(args.fast)
-        except Exception as e:  # keep the suite running
+        except Exception as e:  # keep the suite running (unless --strict)
             import traceback
             traceback.print_exc()
             print(f"{name},ERROR,{type(e).__name__}: {e}")
+            if args.strict:
+                raise
     print(f"# total wall time: {time.time()-t0:.0f}s")
 
 

@@ -2,8 +2,11 @@
 # CI gate: tier-1 test subset + smoke benchmarks on one small table.
 #
 #   tier-1:   python -m pytest -q -m "not slow"     (< 1 minute)
-#   smoke:    engine-comparison benchmark, fast sizes (DESIGN.md §5)
-#   pipeline: streaming-vs-barrier refinement overlap, fast sizes (§5)
+#   smoke:    engine-comparison benchmark, fast sizes (DESIGN.md §6)
+#   pipeline: streaming-vs-barrier refinement overlap, fast sizes (§6)
+#   serving:  plane-store cold/warm/delta regime (§4) — runs --strict and
+#             FAILS CI if the warm path reports nonzero extraction charges
+#             or nonzero plane H2D bytes
 #
 # The slow suite (system joins, ≥50-trial guarantee sweep, per-arch smoke
 # tests) runs separately:
@@ -20,5 +23,8 @@ python -m benchmarks.run --fast --only engines
 
 echo "== smoke benchmark: streaming refinement pipeline =="
 python -m benchmarks.run --fast --only pipeline
+
+echo "== smoke benchmark: join-serving plane store (strict warm-path gate) =="
+python -m benchmarks.run --fast --strict --only serving
 
 echo "CI OK"

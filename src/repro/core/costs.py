@@ -40,6 +40,14 @@ class CostLedger:
     step2_wall: float = 0.0      # candidate production (engine stream)
     refine_wall: float = 0.0     # oracle refinement
     overlap_wall: float = 0.0    # portion of the two that ran concurrently
+    # serving counters (DESIGN.md §4): plane-store traffic for this query.
+    # Counts, not dollars — the whole point of the store is that a plane
+    # hit costs $0; reported via serving_summary(), kept out of total.
+    plane_hits: int = 0          # (spec, side) planes served device-resident
+    plane_misses: int = 0        # planes that had to be extracted + uploaded
+    plane_evicted_bytes: int = 0 # device bytes freed by LRU eviction
+    plane_resident_bytes: int = 0  # device bytes pinned after the query
+    bytes_h2d: int = 0           # host->device plane bytes actually moved
 
     def charge_label(self, prompt_tokens: int, output_tokens: int = 1):
         self.labeling += (prompt_tokens * PRICE_JOIN_LLM_IN
@@ -64,6 +72,42 @@ class CostLedger:
         self.step2_wall += step2
         self.refine_wall += refine
         self.overlap_wall += overlap
+
+    def record_plane_traffic(self, *, hits: int = 0, misses: int = 0,
+                             evicted_bytes: int = 0, resident_bytes: int = 0,
+                             bytes_h2d: int = 0):
+        """Accumulate plane-store counters (resident_bytes is a level, not a
+        flow: callers pass the store's current value and it overwrites)."""
+        self.plane_hits += int(hits)
+        self.plane_misses += int(misses)
+        self.plane_evicted_bytes += int(evicted_bytes)
+        self.plane_resident_bytes = int(resident_bytes)
+        self.bytes_h2d += int(bytes_h2d)
+
+    def absorb(self, other: "CostLedger") -> None:
+        """Merge another ledger's charges in (serving: per-query ledgers
+        accumulate into the service-lifetime ledger)."""
+        self.labeling += other.labeling
+        self.construction += other.construction
+        self.inference += other.inference
+        self.refinement += other.refinement
+        self.record_walls(other.step2_wall, other.refine_wall,
+                          other.overlap_wall)
+        self.record_plane_traffic(
+            hits=other.plane_hits, misses=other.plane_misses,
+            evicted_bytes=other.plane_evicted_bytes,
+            resident_bytes=other.plane_resident_bytes,
+            bytes_h2d=other.bytes_h2d)
+
+    def serving_summary(self) -> dict:
+        """Plane-store counters for the Fig-9 breakdown / serving benchmark."""
+        return {
+            "plane_hits": self.plane_hits,
+            "plane_misses": self.plane_misses,
+            "plane_evicted_bytes": self.plane_evicted_bytes,
+            "plane_resident_bytes": self.plane_resident_bytes,
+            "bytes_h2d": self.bytes_h2d,
+        }
 
     def wall_summary(self) -> dict:
         """Pipeline wall seconds; pipelined_wall is the effective critical

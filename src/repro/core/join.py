@@ -12,6 +12,19 @@
   9. refinement: oracle on Ŷ                  (cost: refinement) — precision 1
      (or Appx-C featurization-precision subsets when T_P < 1)
 
+The pipeline is split at its natural serving seam (DESIGN.md §4):
+``plan_join`` runs steps ①–⑥ (corpus-size-free, O(sample)) and returns a
+``JoinPlan``; ``execute_join`` runs steps ⑦–⑨ against any corpus shape.
+Step ⑦ goes through a pluggable *plane provider* — by default the
+extractor's ``materialize`` (cold path), in serving the
+``FeaturePlaneStore`` (device-resident planes, zero re-extraction).
+``fdj_join`` composes the two; outputs are identical to the historical
+monolith for the precision-1 path, while the Appx-C path (T_P < 1) now
+draws its subset samples from a fresh ``seed + 1`` stream — a deliberate
+change so a replayed plan (serving) executes byte-identically to a cold
+run, at the cost of different (equally valid) samples than pre-split
+runs at the same seed.
+
 With ``stream_refinement=True`` steps ⑧ and ⑨ are pipelined: the engine's
 ``evaluate_stream`` emits per-chunk candidates that a ``RefinementPump``
 (core.refine) refines concurrently, so end-to-end wall approaches
@@ -35,7 +48,7 @@ from repro.core import generation, scaffold as scaffold_lib
 from repro.core.adj_target import adj_target
 from repro.core.bargain import bargain_precision_subset
 from repro.core.costs import CostLedger
-from repro.core.featurize import FeaturizationSpec
+from repro.core.featurize import FeatureData, FeaturizationSpec
 from repro.core.refine import RefinementPump
 from repro.core.scaffold import Scaffold, min_fpr_thresholds
 
@@ -54,10 +67,37 @@ class FDJConfig:
     mc_trials: int = 20000
     block: int = 4096              # L/R block edge for step-2 evaluation
     engine: str = "numpy"          # numpy | pallas | sharded (repro.engine)
+    engine_opts: dict = dataclasses.field(default_factory=dict)
+    #   extra get_engine kwargs (tile sizes etc.) — either flat kwargs for
+    #   cfg.engine, or keyed per engine name ({"pallas": {...}, ...}) so a
+    #   per-query engine override picks its own opts; execution-only,
+    #   never part of a serving plan key
     stream_refinement: bool = False  # pipeline step ⑨ over step ②'s stream
     refine_batch_pairs: int = 512  # oracle batch size inside the pump
     pump_queue_chunks: int = 4     # bounded chunk queue (engine backpressure)
     seed: int = 0
+
+
+@dataclasses.dataclass
+class JoinPlan:
+    """Output of steps ①–⑥: the featurized decomposition plus thresholds.
+
+    A plan is a pure function of (dataset content, cfg, seed) and contains
+    nothing corpus-shape-specific beyond what the samples baked in — the
+    serving layer caches it across repeated queries and carries it forward
+    over delta appends (the delta-join contract, DESIGN.md §4)."""
+    specs: list                    # all proposed featurizations
+    scaffold: Scaffold             # clauses over `specs` indices
+    used_specs: list               # specs the scaffold references
+    sc_local: Scaffold             # scaffold remapped onto used_specs
+    theta: np.ndarray              # per-clause thresholds (Eq 4)
+    t_prime: float                 # adjusted recall target (step ⑤)
+    feasible: bool                 # Eq-4 feasibility on S'
+
+    @property
+    def degenerate(self) -> bool:
+        """No usable decomposition: refine-everything fallback (sound)."""
+        return not self.feasible or not self.sc_local.n_clauses
 
 
 @dataclasses.dataclass
@@ -73,6 +113,20 @@ class JoinResult:
     candidate_count: int
     met_target: bool
     engine_stats: Optional[object] = None   # repro.engine.EngineStats of step ②
+    candidates: Optional[list] = None       # sorted step-② survivors (serving
+                                            # keeps them for delta-join merges)
+
+
+def make_label_fn(oracle, cache: dict) -> Callable:
+    """Cached oracle labeling: each pair is charged at most once per cache."""
+    def label(pairs, kind):
+        new = [p for p in pairs if p not in cache]
+        if new:
+            labs = oracle.label_pairs(new, kind=kind)
+            for p, l in zip(new, labs):
+                cache[p] = bool(l)
+        return np.asarray([cache[p] for p in pairs], bool)
+    return label
 
 
 def _sample_pairs(n_l: int, n_r: int, k: int, rng) -> list:
@@ -80,23 +134,17 @@ def _sample_pairs(n_l: int, n_r: int, k: int, rng) -> list:
     return [(int(i // n_r), int(i % n_r)) for i in idx]
 
 
-def fdj_join(dataset, oracle, proposer, extractor, cfg: FDJConfig) -> JoinResult:
-    """dataset: repro.data.synth.JoinDataset; oracle: core.llm.Oracle;
-    proposer/extractor: generation protocol impls (dataset-owned)."""
+def plan_join(dataset, oracle, proposer, extractor, cfg: FDJConfig, *,
+              ledger: Optional[CostLedger] = None,
+              label: Optional[Callable] = None) -> JoinPlan:
+    """Steps ①–⑥: sample, generate featurizations, scaffold, thresholds."""
     rng = np.random.default_rng(cfg.seed)
-    ledger = oracle.ledger
+    ledger = ledger if ledger is not None else oracle.ledger
+    if label is None:
+        label = make_label_fn(oracle, {})
     n_l, n_r = dataset.n_l, dataset.n_r
     n_pairs = n_l * n_r
     rate = max(dataset.n_positive, 1) / n_pairs
-    label_cache: dict = {}
-
-    def label(pairs, kind):
-        new = [p for p in pairs if p not in label_cache]
-        if new:
-            labs = oracle.label_pairs(new, kind=kind)
-            for p, l in zip(new, labs):
-                label_cache[p] = bool(l)
-        return np.asarray([label_cache[p] for p in pairs], bool)
 
     # --- 1. generation sample ------------------------------------------------
     k_gen = min(int(math.ceil(cfg.gen_positives / rate * 1.25)), n_pairs)
@@ -144,16 +192,53 @@ def fdj_join(dataset, oracle, proposer, extractor, cfg: FDJConfig) -> JoinResult
         theta = np.zeros(0)
         feasible = False
 
+    return JoinPlan(specs=specs, scaffold=sc, used_specs=used_specs,
+                    sc_local=sc_local, theta=theta, t_prime=t_prime,
+                    feasible=feasible)
+
+
+def execute_join(dataset, oracle, extractor, cfg: FDJConfig, plan: JoinPlan,
+                 *, plane_provider: Optional[Callable] = None,
+                 ledger: Optional[CostLedger] = None,
+                 label: Optional[Callable] = None,
+                 keep_candidates: bool = False) -> JoinResult:
+    """Steps ⑦–⑨: materialize planes, evaluate the CNF, refine.
+
+    ``plane_provider(used_specs, ledger) -> Sequence[FeatureData]`` is the
+    step-⑦ seam: default is the extractor's full-corpus ``materialize``
+    (cold); the serving layer passes the FeaturePlaneStore's ``provide``
+    (device-resident, charges only misses).
+
+    ``keep_candidates=True`` retains the sorted step-② survivor list on
+    the result (the serving layer needs it for delta-join merges); one-
+    shot callers leave it off so a degenerate plan doesn't pin O(n_l·n_r)
+    tuples past the join.
+    """
+    ledger = ledger if ledger is not None else oracle.ledger
+    if label is None:
+        label = make_label_fn(oracle, {})
+    # fresh, plan-independent stream for the Appx-C subset sampler so a
+    # replayed plan (serving) executes byte-identically to a cold run
+    rng = np.random.default_rng(cfg.seed + 1)
+    provider = plane_provider or \
+        (lambda specs, led: extractor.materialize(specs, led))
+    n_l, n_r = dataset.n_l, dataset.n_r
+
+    # --- 7. plane materialization ---------------------------------------------
+    feats: Sequence = []
+    need_planes = (not plan.degenerate) or \
+        (cfg.precision_target < 1.0 and plan.used_specs)
+    if need_planes:
+        feats = provider(plan.used_specs, ledger)
+
     # --- 8-9. candidate production + refinement --------------------------------
     # degenerate scaffold: decomposition admits everything (always-sound)
-    degenerate = not feasible or not sc_local.n_clauses
     engine_stats = None
     if cfg.stream_refinement:
-        if degenerate:
+        if plan.degenerate:
             chunk_iter = iter([_degenerate_chunk(n_l, n_r)])
         else:
-            chunk_iter = _stream_cnf(extractor, used_specs, sc_local, theta,
-                                     ledger, cfg)
+            chunk_iter = _stream_cnf(feats, plan.sc_local, plan.theta, cfg)
         if cfg.precision_target >= 1.0:
             def refine_chunk(batch):
                 labs = label(batch, "refinement")
@@ -166,19 +251,18 @@ def fdj_join(dataset, oracle, proposer, extractor, cfg: FDJConfig) -> JoinResult
             # accumulates the stream and runs the ladder once at drain time
             pump = RefinementPump(
                 final=lambda cands: _precision_extension(
-                    cands, used_specs, extractor, label, ledger, cfg, rng),
+                    cands, feats, label, cfg, rng),
                 max_queue_chunks=cfg.pump_queue_chunks)
         pr = pump.run(chunk_iter, ledger=ledger)
         out_pairs = pr.pairs
         cand_arr = pr.candidates
         engine_stats = pr.engine_stats
     else:
-        if degenerate:
+        if plan.degenerate:
             candidates = [(i, j) for i in range(n_l) for j in range(n_r)]
         else:
-            candidates, engine_stats = _evaluate_cnf(extractor, used_specs,
-                                                     sc_local, theta, ledger,
-                                                     cfg)
+            candidates, engine_stats = _evaluate_cnf(feats, plan.sc_local,
+                                                     plan.theta, cfg)
         out_pairs = set()
         cand_arr = list(candidates)
         t0 = time.perf_counter()
@@ -186,8 +270,7 @@ def fdj_join(dataset, oracle, proposer, extractor, cfg: FDJConfig) -> JoinResult
             labs = label(cand_arr, "refinement")
             out_pairs = {p for p, l in zip(cand_arr, labs) if l}
         else:
-            out_pairs = _precision_extension(cand_arr, used_specs, extractor,
-                                             label, ledger, cfg, rng)
+            out_pairs = _precision_extension(cand_arr, feats, label, cfg, rng)
         ledger.record_walls(engine_stats.wall_s if engine_stats else 0.0,
                             time.perf_counter() - t0, 0.0)
 
@@ -197,40 +280,54 @@ def fdj_join(dataset, oracle, proposer, extractor, cfg: FDJConfig) -> JoinResult
     precision = tp / max(len(out_pairs), 1) if out_pairs else 1.0
     return JoinResult(
         pairs=out_pairs, recall=recall, precision=precision, cost=ledger,
-        scaffold=sc, specs=specs, theta=theta, t_prime=t_prime,
+        scaffold=plan.scaffold, specs=plan.specs, theta=plan.theta,
+        t_prime=plan.t_prime,
         candidate_count=len(cand_arr),
         met_target=(recall >= cfg.recall_target - 1e-12
                     and precision >= cfg.precision_target - 1e-12),
         engine_stats=engine_stats,
+        candidates=sorted(cand_arr) if keep_candidates else None,
     )
 
 
-def _evaluate_cnf(extractor, used_specs, sc: Scaffold, theta: np.ndarray,
-                  ledger: CostLedger, cfg: FDJConfig):
+def fdj_join(dataset, oracle, proposer, extractor, cfg: FDJConfig,
+             plane_provider: Optional[Callable] = None) -> JoinResult:
+    """dataset: repro.data.synth.JoinDataset; oracle: core.llm.Oracle;
+    proposer/extractor: generation protocol impls (dataset-owned)."""
+    ledger = oracle.ledger
+    label = make_label_fn(oracle, {})   # shared: refinement reuses sample labels
+    plan = plan_join(dataset, oracle, proposer, extractor, cfg,
+                     ledger=ledger, label=label)
+    return execute_join(dataset, oracle, extractor, cfg, plan,
+                        plane_provider=plane_provider, ledger=ledger,
+                        label=label)
+
+
+def _evaluate_cnf(feats, sc: Scaffold, theta: np.ndarray, cfg: FDJConfig):
     """Step 2: CNF evaluation over the full cross product via repro.engine.
 
     Returns (candidates, EngineStats).  Engine selection/backends live in
-    ``repro.engine`` (DESIGN.md section 2); this function only materializes
-    the used featurizations (charging the ledger) and dispatches.
-    """
-    from repro.engine import get_engine
-
-    feats = extractor.materialize(used_specs, ledger)    # full-corpus FeatureData
-    opts = {"block": cfg.block} if cfg.engine == "numpy" else {}
-    res = get_engine(cfg.engine, **opts).evaluate(feats, sc.clauses, theta)
+    ``repro.engine`` (DESIGN.md section 2); materialization/charging
+    happened upstream through the plane provider."""
+    res = _get_engine(cfg).evaluate(feats, sc.clauses, theta)
     return res.candidates, res.stats
 
 
-def _stream_cnf(extractor, used_specs, sc: Scaffold, theta: np.ndarray,
-                ledger: CostLedger, cfg: FDJConfig):
-    """Streaming step ②: same materialization/charges as ``_evaluate_cnf``
-    but hands back the engine's chunk iterator for the RefinementPump."""
-    from repro.engine import get_engine
+def _stream_cnf(feats, sc: Scaffold, theta: np.ndarray, cfg: FDJConfig):
+    """Streaming step ②: hands back the engine's chunk iterator for the
+    RefinementPump."""
+    return _get_engine(cfg).evaluate_stream(feats, sc.clauses, theta)
 
-    feats = extractor.materialize(used_specs, ledger)
-    opts = {"block": cfg.block} if cfg.engine == "numpy" else {}
-    return get_engine(cfg.engine, **opts).evaluate_stream(
-        feats, sc.clauses, theta)
+
+def _get_engine(cfg: FDJConfig):
+    from repro.engine import ENGINES, get_engine
+
+    opts = dict(cfg.engine_opts)
+    if opts and set(opts) <= set(ENGINES):   # per-engine keyed mapping
+        opts = dict(opts.get(cfg.engine, {}))
+    if cfg.engine == "numpy":
+        opts.setdefault("block", cfg.block)
+    return get_engine(cfg.engine, **opts)
 
 
 def _degenerate_chunk(n_l: int, n_r: int):
@@ -241,20 +338,29 @@ def _degenerate_chunk(n_l: int, n_r: int):
     return CandidateChunk(pairs, None, 0)
 
 
-def _precision_extension(cand_pairs, used_specs, extractor, label, ledger,
-                         cfg: FDJConfig, rng) -> set:
-    """Appx C: per-featurization precision subsets skip refinement."""
+def _precision_extension(cand_pairs, feats, label, cfg: FDJConfig,
+                         rng) -> set:
+    """Appx C: per-featurization precision subsets skip refinement.
+
+    Distances come from the materialized planes (``feats``) — identical
+    values to the historical per-pair extractor path, and identical
+    charges whenever step ② ran (those records were first-touch charged by
+    step ⑦).  One deliberate divergence: on a *degenerate* plan the
+    monolith extracted lazily per surviving pair set, while this path
+    materializes the used specs up front — full-corpus charges for a
+    corner the decomposition already failed to prune.  Free on the serving
+    warm path where the planes are store-resident."""
     if not cand_pairs:
         return set()
     remaining = np.arange(len(cand_pairs))
     accepted: set = set()
-    r = max(len(used_specs), 1)
+    r = max(len(feats), 1)
     delta1 = cfg.delta / (2.0 * r)
-    for spec in used_specs:
+    for fd in feats:
         if remaining.size == 0:
             break
         pairs_sub = [cand_pairs[i] for i in remaining]
-        d = extractor.pair_distances([spec], pairs_sub, ledger)[:, 0]
+        d = fd.pair_distances(pairs_sub)
 
         def label_fn(idx):
             return label([pairs_sub[i] for i in idx], "refinement")

@@ -12,7 +12,10 @@ the true field value with deterministic per-(spec, side, record) corruption
 whose rate decays with the spec version (the LLM's fixes), charging the
 ledger with token-accurate extraction + embedding costs on first touch of
 each record (generation phase touches only sampled records; the join-time
-``materialize`` pass touches the full corpus).
+``materialize`` pass touches the full corpus).  Charging is vectorized per
+spec — one batched ledger charge over the newly touched records — and
+``extract_values`` exposes per-side raw extraction for the serving plane
+store (serving/planes.py).
 """
 
 from __future__ import annotations
@@ -120,6 +123,8 @@ class SimulatedExtractor:
         self._features: dict = {}      # key -> FeatureData
         self._charged: dict = {}       # (key, side) -> bool ndarray
         self._embedder = HashedNgramEmbedder(dim=128)
+        self._text_tok: dict = {}      # side -> per-record token counts
+        self._val_tok: dict = {}       # (key, side) -> per-record token counts
 
     # -- extraction simulation ------------------------------------------------
     def _noise_rate(self, fld: Field, version: int) -> float:
@@ -158,6 +163,28 @@ class SimulatedExtractor:
         return self._features[spec.key]
 
     # -- cost charging ----------------------------------------------------------
+    # Charging is a vectorized per-spec pass: token counts are precomputed
+    # once per (spec, side) as arrays, and a materialize/extract call issues
+    # ONE batched ledger charge over the newly touched records instead of a
+    # per-record host loop.  Totals match the per-record loop exactly (the
+    # per-record prices are linear in token counts; see
+    # tests/test_simulated_llm.py for the parity check).
+
+    def _text_tok_counts(self, side: str) -> np.ndarray:
+        if side not in self._text_tok:
+            texts = self.dataset.texts_l if side == "l" else self.dataset.texts_r
+            self._text_tok[side] = np.asarray(
+                [n_tokens(t) for t in texts], np.int64)
+        return self._text_tok[side]
+
+    def _val_tok_counts(self, spec: FeaturizationSpec, side: str) -> np.ndarray:
+        key = (spec.key, side)
+        if key not in self._val_tok:
+            vals = self._extract_side(spec, side)
+            self._val_tok[key] = np.asarray(
+                [n_tokens(str(v or "")) for v in vals], np.int64)
+        return self._val_tok[key]
+
     def _charge(self, spec: FeaturizationSpec, side: str, idx: np.ndarray,
                 ledger: CostLedger):
         key = (spec.key, side)
@@ -168,13 +195,13 @@ class SimulatedExtractor:
         new = np.unique(idx[~mask[idx]]) if len(idx) else np.zeros(0, int)
         if new.size == 0:
             return
-        vals = self._extract_side(spec, side)
-        for i in new:
-            if spec.extractor_kind == "llm":
-                ledger.charge_extraction(n_tokens(texts[i]) + 30,
-                                         n_tokens(str(vals[i] or "")) + 2)
-            if spec.distance_kind == "semantic":
-                ledger.charge_embedding(n_tokens(str(vals[i] or "")) + 1)
+        val_tok = self._val_tok_counts(spec, side)
+        if spec.extractor_kind == "llm":
+            ledger.charge_extraction(
+                int(self._text_tok_counts(side)[new].sum() + 30 * new.size),
+                int(val_tok[new].sum() + 2 * new.size))
+        if spec.distance_kind == "semantic":
+            ledger.charge_embedding(int(val_tok[new].sum() + new.size))
         mask[new] = True
 
     # -- FeatureExtractor protocol ------------------------------------------------
@@ -199,3 +226,15 @@ class SimulatedExtractor:
             self._charge(s, "r", np.arange(self.dataset.n_r), ledger)
             feats.append(f)
         return feats
+
+    def extract_values(self, spec: FeaturizationSpec, side: str,
+                       ledger: CostLedger, idx=None) -> list:
+        """Raw extracted values for ``side`` at ``idx`` (full corpus when
+        None), charging the ledger for first-touch records only — the
+        extraction seam the serving plane store builds on (a resident
+        plane never reaches this call)."""
+        n = self.dataset.n_l if side == "l" else self.dataset.n_r
+        idx = np.arange(n) if idx is None else np.asarray(idx, int)
+        vals = self._extract_side(spec, side)
+        self._charge(spec, side, idx, ledger)
+        return [vals[i] for i in idx]

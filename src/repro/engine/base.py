@@ -58,6 +58,11 @@ class EngineStats:
     # pulls the packed n_l×n_r/8 bitmask; the sharded backend pulls only
     # per-device counts plus the compacted (i, j) pairs.
     bytes_to_host: int = 0
+    # bytes moved host -> device to stage the feature planes for this
+    # evaluation.  Cold path: the full packed plane set.  Warm serving path
+    # (planes already device-resident via serving.planes): 0 — the
+    # invariant the FeaturePlaneStore exists to provide (DESIGN.md §4).
+    bytes_h2d: int = 0
 
     @property
     def plane_bytes(self) -> int:
@@ -69,6 +74,7 @@ class EngineStats:
             "engine": self.engine, "n_l": self.n_l, "n_r": self.n_r,
             "n_candidates": self.n_candidates, "wall_s": self.wall_s,
             "bytes_to_host": self.bytes_to_host,
+            "bytes_h2d": self.bytes_h2d,
             "plane_bytes": self.plane_bytes,
         }
 
@@ -83,6 +89,7 @@ class EngineStats:
             out.n_candidates += d.n_candidates
             out.wall_s += d.wall_s
             out.bytes_to_host += d.bytes_to_host
+            out.bytes_h2d += d.bytes_h2d
         return out
 
 
@@ -149,20 +156,25 @@ class CnfEngine(abc.ABC):
                                    n_candidates=len(cands),
                                    wall_s=time.perf_counter() - t_prev), 0)
             return
-        for idx, (pairs, nbytes) in enumerate(
+        for idx, (pairs, nbytes, h2d) in enumerate(
                 self._evaluate_stream(feats, clauses, thetas, n_l, n_r)):
             pairs = sorted(pairs)
             yield CandidateChunk(
                 pairs, EngineStats(self.name, n_l=n_l, n_r=n_r,
                                    n_candidates=len(pairs),
                                    wall_s=time.perf_counter() - t_prev,
-                                   bytes_to_host=nbytes), idx)
+                                   bytes_to_host=nbytes,
+                                   bytes_h2d=h2d), idx)
             t_prev = time.perf_counter()
 
     @abc.abstractmethod
     def _evaluate_stream(self, feats, clauses, thetas, n_l: int, n_r: int):
-        """Yields (pairs, bytes_to_host) per backend-defined chunk; chunks
-        must be disjoint and together cover the exact candidate set."""
+        """Yields (pairs, bytes_to_host, bytes_h2d) per backend-defined
+        chunk; chunks must be disjoint and together cover the exact
+        candidate set.  ``bytes_h2d`` is the plane upload attributed to the
+        chunk (backends stage planes once, so only the first chunk of a
+        cold evaluation carries a nonzero value; 0 throughout when planes
+        are already device-resident)."""
 
 
 def corpus_shape(feats: Sequence, clauses: Sequence) -> tuple:

@@ -157,14 +157,18 @@ class ShardedEngine(CnfEngine):
         ndev = mesh.shape["data"]
 
         # pad L to a multiple of ndev*tl (equal shards, tile-aligned rows)
-        # and R to a multiple of r_chunk (whole stream steps).
-        emb_l, emb_r, scal_l, scal_r, kclauses, _, _ = cnf_ops.pack_features(
-            feats, clauses, tl=ndev * self.tl, tr=self.r_chunk)
+        # and R to a multiple of r_chunk (whole stream steps).  stage_planes
+        # uploads a host pack once — or assembles on device from a resident
+        # plane set (serving store) with zero H2D.  On a multi-device mesh a
+        # store-resident (single-device) array is resharded device-to-device
+        # by jit, which still never re-pays the host link.
+        emb_l, emb_r, scal_l, scal_r, kclauses, _, _, h2d = \
+            cnf_ops.stage_planes(feats, clauses, tl=ndev * self.tl,
+                                 tr=self.r_chunk)
         pl_n, pr_n = emb_l.shape[1], emb_r.shape[1]
         rows_shard = pl_n // ndev
         n_chunks = pr_n // self.r_chunk
-        args = (jnp.asarray(emb_l), jnp.asarray(emb_r),
-                jnp.asarray(scal_l), jnp.asarray(scal_r))
+        args = (emb_l, emb_r, scal_l, scal_r)
         thetas = tuple(float(t) for t in thetas)
 
         cap = self.capacity or max(4096, 4 * rows_shard)
@@ -179,6 +183,7 @@ class ShardedEngine(CnfEngine):
                 # retry of this chunk sized >=4x (and >= the true max) suffices
                 cap = max(4 * cap, -(-int(max(counts)) // 1024) * 1024)
             self.capacity = cap        # start here next chunk: no repeat retry
+            chunk_h2d = h2d if k == 0 else 0
             bytes_to_host = counts.nbytes
             out = []
             for d in range(ndev):
@@ -189,10 +194,10 @@ class ShardedEngine(CnfEngine):
                 bytes_to_host += seg.nbytes
                 out.append(seg)
             if not out:
-                yield [], bytes_to_host
+                yield [], bytes_to_host, chunk_h2d
                 continue
             pairs = np.concatenate(out, axis=0)
             keep = (pairs[:, 0] < n_l) & (pairs[:, 1] < n_r)    # drop padding
             pairs = pairs[keep]
             yield (list(zip(pairs[:, 0].tolist(), pairs[:, 1].tolist())),
-                   bytes_to_host)
+                   bytes_to_host, chunk_h2d)

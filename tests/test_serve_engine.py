@@ -1,0 +1,106 @@
+"""Tier-1 ServeEngine units: wave left-padding / ``valid_from`` masking and
+eos early-exit truncation.
+
+The slow suite exercises the engine through full-size smoke archs
+(test_substrate.py); these tests pin the wave-scheduling semantics on a
+tiny float32 transformer so they run in tier-1: pad positions must be
+invisible end-to-end (a padded batched slot decodes exactly like a solo
+run), and a slot that emits eos stops collecting tokens while the wave
+drains — with the whole wave stopping early once every slot is done.
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.common.config import ModelConfig
+from repro.models import transformer as tr
+from repro.serving.engine import Request, ServeEngine
+
+_TINY = ModelConfig(
+    name="tiny-serve", num_layers=2, d_model=32, num_heads=2, num_kv_heads=2,
+    d_ff=64, vocab_size=61, max_seq_len=64, rope_theta=10000.0,
+    dtype="float32", param_dtype="float32", remat=False)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    params = tr.init_params(_TINY, jax.random.PRNGKey(0))
+    return _TINY, params
+
+
+def _solo(cfg, params, prompt, max_new, eos_id=-1):
+    eng = ServeEngine(cfg, params, batch_slots=1, capacity=48)
+    r = Request(prompt, max_new_tokens=max_new, eos_id=eos_id)
+    eng.run([r])
+    return r.out_tokens
+
+
+def test_wave_left_padding_matches_solo_runs(tiny):
+    """Ragged prompts share one left-padded wave; valid_from masking makes
+    each slot's decode identical to an unpadded single-request run."""
+    cfg, params = tiny
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (3, 7, 11)]                    # forces 8 & 4 pad cols
+    eng = ServeEngine(cfg, params, batch_slots=3, capacity=48)
+    reqs = [Request(p, max_new_tokens=6) for p in prompts]
+    eng.run(reqs)
+    for p, r in zip(prompts, reqs):
+        assert r.out_tokens == _solo(cfg, params, p, 6), \
+            "padded slot diverged from solo decode"
+
+
+def test_partial_wave_ignores_empty_slots(tiny):
+    """Empty slots (valid_from = all-pad) must not perturb live ones."""
+    cfg, params = tiny
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (4, 9)]
+    eng = ServeEngine(cfg, params, batch_slots=4, capacity=48)  # 2 empty
+    reqs = [Request(p, max_new_tokens=5) for p in prompts]
+    eng.run(reqs)
+    for p, r in zip(prompts, reqs):
+        assert r.out_tokens == _solo(cfg, params, p, 5)
+
+
+def test_eos_truncates_and_wave_exits_early(tiny):
+    """A slot whose last token is eos stops collecting; once every slot is
+    done the wave stops stepping (greedy decode is deterministic, so the
+    eos id is learned from an eos-free reference run)."""
+    cfg, params = tiny
+    rng = np.random.default_rng(2)
+    prompt = rng.integers(0, cfg.vocab_size, size=5).astype(np.int32)
+    free = _solo(cfg, params, prompt, 8)               # no eos: full budget
+    assert len(free) == 8
+    eos = free[2]                                      # truncate after 3 tokens
+
+    eng = ServeEngine(cfg, params, batch_slots=1, capacity=48)
+    r = Request(prompt, max_new_tokens=8, eos_id=eos)
+    eng.run([r])
+    cut = free.index(eos) + 1
+    assert r.out_tokens == free[:cut]                  # truncated at first eos
+    assert r.out_tokens[-1] == eos
+    # early exit: the wave stopped decoding once the slot was done
+    full_eng = ServeEngine(cfg, params, batch_slots=1, capacity=48)
+    full_eng.run([Request(prompt, max_new_tokens=8)])
+    assert eng.steps_executed < full_eng.steps_executed
+
+
+def test_mixed_budgets_truncate_per_slot(tiny):
+    """A short-budget slot stops at max_new_tokens while the wave keeps
+    decoding for its longer-budget peers."""
+    cfg, params = tiny
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab_size, size=6).astype(np.int32)
+               for _ in range(2)]
+    eng = ServeEngine(cfg, params, batch_slots=2, capacity=48)
+    short = Request(prompts[0], max_new_tokens=2)
+    long = Request(prompts[1], max_new_tokens=7)
+    eng.run([short, long])
+    assert len(short.out_tokens) == 2
+    assert len(long.out_tokens) == 7
+    assert short.out_tokens == _solo(cfg, params, prompts[0], 2)
+    assert long.out_tokens == _solo(cfg, params, prompts[1], 7)
