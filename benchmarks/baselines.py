@@ -7,7 +7,6 @@ the cost ratio normalized by the naive all-pairs join cost.
 
 from __future__ import annotations
 
-import dataclasses
 import math
 import time
 
@@ -15,7 +14,7 @@ import numpy as np
 
 from repro.core.bargain import (optimal_cascade_threshold,
                                 recall_guarded_threshold, supg_threshold)
-from repro.core.costs import CostLedger, naive_join_cost, n_tokens
+from repro.core.costs import CostLedger, naive_join_cost
 from repro.core.join import FDJConfig, fdj_join
 from repro.core.llm import HashedNgramEmbedder, semantic_distance_matrix
 from repro.data.simulated_llm import SimulatedExtractor, SimulatedProposer

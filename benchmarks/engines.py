@@ -10,14 +10,18 @@ the same CNF through every ``repro.engine`` backend and report
   * the O(n_l·n_r) boolean-plane size that the sharded backend's
     O(candidates) transfer replaces.
 
+The regime then runs the **multi-pod dry-run** (``launch/multipod_dryrun``
+as a subprocess — the XLA device-count override must precede jax init) on
+the (2, 16, 16) mesh: pod-axis L sharding with cross-pod collectives
+asserted candidate-count sized via ``distributed.hlo_analysis`` and warm
+sharded serving asserted at zero plane-reshard bytes.  A failed dry-run
+fails the regime (CI gates this via ``run.py --strict``).
+
 Usage:  PYTHONPATH=src python -m benchmarks.run --fast --only engines
 """
 
 from __future__ import annotations
 
-import time
-
-import numpy as np
 
 from repro.core.costs import CostLedger
 from repro.data import synth
@@ -61,6 +65,7 @@ def run(fast: bool = True):
                    "n_r": res.stats.n_r, "candidates": res.stats.n_candidates,
                    "wall_s": round(res.stats.wall_s, 3),
                    "bytes_to_host": res.stats.bytes_to_host,
+                   "bytes_reshard": res.stats.bytes_reshard,
                    "plane_bytes": res.stats.plane_bytes,
                    "agrees_with_numpy": agree}
             rows.append(row)
@@ -71,7 +76,32 @@ def run(fast: bool = True):
             if not agree:
                 raise AssertionError(
                     f"engine {ename} disagrees with numpy on {name}")
+    rows.extend(run_multipod())
     return rows
+
+
+def run_multipod(mesh: str = "2,16,16") -> list:
+    """The (2, 16, 16) dry-run gate, reported as benchmark rows."""
+    from repro.launch.dryrun_client import run_dryrun
+    rep = run_dryrun(mesh, timeout=560)
+    p, h, s = rep["parity"], rep["hlo"], rep["serving"]
+    row = {"table": "multipod_dryrun", "engine": f"sharded@{mesh}",
+           "n_l": p["n_l"], "n_r": p["n_r"], "candidates": p["candidates"],
+           "wall_s": rep["wall_s"], "bytes_to_host": p["bytes_to_host"],
+           "plane_bytes": p["plane_bytes"], "agrees_with_numpy": True,
+           "cross_pod_collective_bytes": h["cross_pod_bytes"],
+           "max_cross_pod_op_bytes": h["max_cross_op_bytes"],
+           "cold_reshard_bytes": s["cold_reshard_bytes"],
+           "warm_reshard_bytes": s["warm_reshard_bytes"],
+           "warm_extraction_cost": s["warm_extraction_cost"]}
+    print(f"engines,multipod_dryrun,mesh={mesh},"
+          f"candidates={row['candidates']},"
+          f"bytes_to_host={row['bytes_to_host']},"
+          f"plane_bytes={row['plane_bytes']},"
+          f"cross_pod_bytes={row['cross_pod_collective_bytes']},"
+          f"warm_reshard_bytes={row['warm_reshard_bytes']},"
+          f"wall_s={row['wall_s']}")
+    return [row]
 
 
 def main(fast: bool):

@@ -14,10 +14,9 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.kernels.fused_cnf_join import ref as cref
-from repro.kernels.fused_cnf_join.kernel import SCAL, VEC
+from repro.kernels.fused_cnf_join.kernel import VEC
 
 
 def analyze(n: int, f_vec: int, d: int, tl: int, tr: int):

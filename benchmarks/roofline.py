@@ -24,7 +24,6 @@ redundancy waste.
 
 import argparse
 import json
-import time
 
 PEAK_FLOPS = 197e12          # bf16 / chip (TPU v5e)
 HBM_BW = 819e9               # bytes/s / chip

@@ -5,6 +5,18 @@ Usage:  PYTHONPATH=src python -m benchmarks.run [--only table3,fig10] [--fast]
 Prints ``name,value,derived`` CSV lines and writes JSON artifacts to
 benchmarks/results/.  --fast shrinks datasets/trials for CI-style runs
 (the default sizes reproduce the paper's regimes; see DESIGN.md §6).
+
+``--check-against DIR`` is the CI regression gate: after the requested
+regimes run, each fresh ``benchmarks/results/<regime>.json`` is compared
+row by row against the committed baseline ``DIR/<regime>.json``
+(``benchmarks/baseline/`` in the tree, regenerated with
+``--fast`` + copy when a change legitimately moves the numbers).  Wall
+seconds get a wide band (machines differ); transfer bytes and dollars get
+a tight one; counts and agreement flags must match exactly.  Any
+regression prints a ``regression,...`` line and the process exits nonzero
+— ``scripts/ci.sh`` runs the engines/pipeline/serving regimes through
+this gate, so a PR cannot silently slow an engine or re-inflate the warm
+serving path.
 """
 
 from __future__ import annotations
@@ -12,7 +24,6 @@ from __future__ import annotations
 import argparse
 import json
 import os
-import sys
 import time
 
 import numpy as np
@@ -211,6 +222,118 @@ ALL = {
 }
 
 
+# --- regression gate --------------------------------------------------------
+#
+# Per-regime row identity + which fields are gated.  Comparison rules are
+# derived from the field name: wall seconds get a wide band (CI machines
+# vary), transfer bytes / dollars a tight one, counts and flags must match
+# exactly.  A baseline row with no fresh counterpart is itself a
+# regression (coverage silently lost).
+
+_GATES = {
+    "engines": {
+        "key": ("table", "engine"),
+        "metrics": ("wall_s", "bytes_to_host", "candidates",
+                    "agrees_with_numpy", "cross_pod_collective_bytes",
+                    "max_cross_pod_op_bytes", "warm_reshard_bytes",
+                    "warm_extraction_cost"),
+    },
+    "pipeline": {
+        "key": ("engine", "mode"),
+        "metrics": ("candidates", "t_first_s", "total_wall"),
+    },
+    "serving": {
+        "key": ("engine", "mode"),
+        "metrics": ("wall_s", "extraction_cost", "bytes_to_device",
+                    "bytes_reshard", "pairs", "agrees_with_cold"),
+    },
+}
+
+# (relative factor, absolute slack) — regression iff now > base*rel + abs.
+# Walls are the one machine-dependent metric: the committed baselines were
+# measured on the dev container, so slower CI runners override the band via
+# FDJ_GATE_WALL_BAND="rel,abs" (.github/workflows/ci.yml sets 6.0,30.0);
+# bytes/dollars/counts are hardware-independent and stay tight everywhere.
+_WALL_BAND = (2.5, 1.0)
+_BYTE_BAND = (1.10, 1024)
+_COST_BAND = (1.10, 1e-9)
+
+
+def _wall_band():
+    override = os.environ.get("FDJ_GATE_WALL_BAND", "")
+    if override:
+        rel, slack = override.split(",")
+        return (float(rel), float(slack))
+    return _WALL_BAND
+
+
+def _metric_band(field: str):
+    """(kind, rel, slack) for banded fields; None = exact match."""
+    if "wall" in field or field.endswith("_s"):
+        return ("wall",) + _wall_band()
+    if "bytes" in field:
+        return ("bytes",) + _BYTE_BAND
+    if "cost" in field:
+        return ("cost",) + _COST_BAND
+    return None                       # exact match (counts, flags)
+
+
+def check_against(baseline_dir: str, regimes, crashed=()) -> list:
+    """Compare fresh results to committed baselines; returns regression
+    strings (empty = gate passed).  ``crashed`` regimes (requested but
+    died before emitting results) are themselves regressions for any
+    gated regime — otherwise a crash in non-strict mode would silently
+    drop its rows from the comparison and the gate would pass."""
+    bad = [f"{name}: regime crashed before emitting results"
+           for name in crashed if name in _GATES]
+    for name in regimes:
+        gate = _GATES.get(name)
+        base_path = os.path.join(baseline_dir, f"{name}.json")
+        if gate is None or not os.path.exists(base_path):
+            continue
+        fresh_path = os.path.join(RESULTS_DIR, f"{name}.json")
+        if not os.path.exists(fresh_path):
+            bad.append(f"{name}: no fresh results to check")
+            continue
+        with open(base_path) as f:
+            base_rows = json.load(f)
+        with open(fresh_path) as f:
+            fresh = {tuple(r.get(k) for k in gate["key"]): r
+                     for r in json.load(f)}
+        for brow in base_rows:
+            key = tuple(brow.get(k) for k in gate["key"])
+            now = fresh.get(key)
+            if now is None:
+                bad.append(f"{name}{list(key)}: row missing from fresh "
+                           f"results (coverage lost)")
+                continue
+            for field in gate["metrics"]:
+                if field not in brow:
+                    continue
+                b, n = brow[field], now.get(field)
+                band = _metric_band(field)
+                if band is None:
+                    if n != b:
+                        bad.append(f"{name}{list(key)}.{field}: "
+                                   f"{b!r} -> {n!r} (must match exactly)")
+                    continue
+                kind, rel, slack = band
+                if kind != "wall" and float(b) == 0.0:
+                    # a zero byte/dollar baseline is an invariant (warm
+                    # reshard, warm extraction), not a measurement — the
+                    # slack would let ~1 KiB of warm traffic creep back in
+                    if n is None or float(n) != 0.0:
+                        bad.append(f"{name}{list(key)}.{field}: 0 -> {n} "
+                                   f"(zero baseline must stay zero)")
+                    continue
+                if n is None or float(n) > float(b) * rel + slack:
+                    bad.append(f"{name}{list(key)}.{field}: {b} -> {n} "
+                               f"(band {rel}x + {slack})")
+    for msg in bad:
+        print(f"regression,{msg}")
+    return bad
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
@@ -218,21 +341,41 @@ def main() -> None:
     ap.add_argument("--strict", action="store_true",
                     help="re-raise regime failures (CI gates, e.g. the "
                          "serving warm-path zero-extraction assertion)")
+    ap.add_argument("--check-against", default="", metavar="DIR",
+                    help="after running, compare fresh results to the "
+                         "baseline JSONs in DIR and exit nonzero on any "
+                         "perf/cost regression (see module docstring)")
     args = ap.parse_args()
     only = [s for s in args.only.split(",") if s]
+    unknown = [s for s in only if s not in ALL]
+    if unknown:
+        # a typo'd regime name would otherwise silently skip both the
+        # regime and its regression gate while still printing gate OK
+        raise SystemExit(
+            f"unknown regime(s) {unknown}; choose from {sorted(ALL)}")
     t0 = time.time()
+    ran, crashed = [], []
     for name, fn in ALL.items():
         if only and name not in only:
             continue
         try:
             fn(args.fast)
+            ran.append(name)
         except Exception as e:  # keep the suite running (unless --strict)
             import traceback
             traceback.print_exc()
             print(f"{name},ERROR,{type(e).__name__}: {e}")
             if args.strict:
                 raise
+            crashed.append(name)
     print(f"# total wall time: {time.time()-t0:.0f}s")
+    if args.check_against:
+        bad = check_against(args.check_against, ran, crashed=crashed)
+        if bad:
+            print(f"# regression gate FAILED: {len(bad)} regression(s) vs "
+                  f"{args.check_against}")
+            raise SystemExit(2)
+        print(f"# regression gate OK vs {args.check_against}")
 
 
 if __name__ == "__main__":

@@ -45,6 +45,7 @@ def _row(name, mode, r, agree):
         "extraction_cost": r.cost.inference,
         "plane_hit_rate": round(st["hits"] / looked, 3) if looked else None,
         "bytes_to_device": r.cost.bytes_h2d,
+        "bytes_reshard": r.cost.bytes_reshard,
         "plan_hit": r.plan_hit, "delta_rows": r.delta_rows,
         "pairs": len(r.pairs), "recall": round(r.join.recall, 4),
         "agrees_with_cold": agree,
@@ -76,6 +77,9 @@ def run(fast: bool = True):
             f"warm {ename} query charged ${warm.cost.inference} extraction"
         assert warm.cost.bytes_h2d == 0, \
             f"warm {ename} query moved {warm.cost.bytes_h2d} plane bytes H2D"
+        assert warm.cost.bytes_reshard == 0, \
+            f"warm {ename} query paid {warm.cost.bytes_reshard} plane " \
+            f"reshard bytes (sharded mesh layout must be memoized)"
         assert agree, f"warm {ename} pairs diverge from cold"
 
         t0 = time.perf_counter()

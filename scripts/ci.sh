@@ -1,30 +1,44 @@
 #!/usr/bin/env bash
-# CI gate: tier-1 test subset + smoke benchmarks on one small table.
+# CI gate: lint + tier-1 test subset + smoke benchmarks + regression gate.
 #
-#   tier-1:   python -m pytest -q -m "not slow"     (< 1 minute)
-#   smoke:    engine-comparison benchmark, fast sizes (DESIGN.md §6)
+#   lint:     ruff check (no autofix), config in ruff.toml; skipped with a
+#             loud warning when ruff is not installed (the container image
+#             may not ship it — the GitHub workflow always does)
+#   tier-1:   python -m pytest -q -m "not slow"     (~2 minutes, incl. the
+#             small pod-mesh subprocess dry-runs; --strict-markers via
+#             pytest.ini: unknown marks fail collection)
+#   smoke:    engine-comparison benchmark, fast sizes (DESIGN.md §6) —
+#             includes the (2, 16, 16) multi-pod dry-run (pod-axis L
+#             sharding; cross-pod collectives asserted candidate-count
+#             sized, warm sharded serving asserted at zero reshard bytes)
 #   pipeline: streaming-vs-barrier refinement overlap, fast sizes (§6)
 #   serving:  plane-store cold/warm/delta regime (§4) — runs --strict and
-#             FAILS CI if the warm path reports nonzero extraction charges
-#             or nonzero plane H2D bytes
+#             FAILS CI if the warm path reports nonzero extraction charges,
+#             nonzero plane H2D bytes, or nonzero plane reshard bytes
+#   gate:     every regime above is compared against the committed
+#             baselines in benchmarks/baseline/ (--check-against): wall
+#             regressions beyond the band, byte/dollar inflations, or lost
+#             coverage exit nonzero
 #
-# The slow suite (system joins, ≥50-trial guarantee sweep, per-arch smoke
-# tests) runs separately:
+# The slow suite (system joins, ≥50-trial guarantee sweep, the full
+# 512-device multipod dry-run test, per-arch smoke tests) runs separately:
 #   python -m pytest -q -m slow
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+echo "== lint: ruff check (no autofix) =="
+if command -v ruff >/dev/null 2>&1; then
+    ruff check .
+else
+    echo "WARNING: ruff not installed; skipping lint (CI workflow runs it)"
+fi
+
 echo "== tier-1: fast test subset =="
 python -m pytest -q -m "not slow"
 
-echo "== smoke benchmark: step-2 engines on one small table =="
-python -m benchmarks.run --fast --only engines
-
-echo "== smoke benchmark: streaming refinement pipeline =="
-python -m benchmarks.run --fast --only pipeline
-
-echo "== smoke benchmark: join-serving plane store (strict warm-path gate) =="
-python -m benchmarks.run --fast --strict --only serving
+echo "== smoke benchmarks + regression gate (engines incl. multipod dry-run, pipeline, serving) =="
+python -m benchmarks.run --fast --strict --only engines,pipeline,serving \
+    --check-against benchmarks/baseline
 
 echo "CI OK"

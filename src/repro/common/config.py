@@ -12,7 +12,7 @@ from __future__ import annotations
 import dataclasses
 import enum
 import math
-from typing import Any, Optional, Sequence
+from typing import Optional, Sequence
 
 
 class BlockKind(str, enum.Enum):

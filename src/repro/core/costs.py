@@ -48,6 +48,8 @@ class CostLedger:
     plane_evicted_bytes: int = 0 # device bytes freed by LRU eviction
     plane_resident_bytes: int = 0  # device bytes pinned after the query
     bytes_h2d: int = 0           # host->device plane bytes actually moved
+    bytes_reshard: int = 0       # device->device bytes laying planes out on
+                                 # the sharded engine's mesh (warm: 0)
 
     def charge_label(self, prompt_tokens: int, output_tokens: int = 1):
         self.labeling += (prompt_tokens * PRICE_JOIN_LLM_IN
@@ -75,7 +77,7 @@ class CostLedger:
 
     def record_plane_traffic(self, *, hits: int = 0, misses: int = 0,
                              evicted_bytes: int = 0, resident_bytes: int = 0,
-                             bytes_h2d: int = 0):
+                             bytes_h2d: int = 0, bytes_reshard: int = 0):
         """Accumulate plane-store counters (resident_bytes is a level, not a
         flow: callers pass the store's current value and it overwrites)."""
         self.plane_hits += int(hits)
@@ -83,6 +85,7 @@ class CostLedger:
         self.plane_evicted_bytes += int(evicted_bytes)
         self.plane_resident_bytes = int(resident_bytes)
         self.bytes_h2d += int(bytes_h2d)
+        self.bytes_reshard += int(bytes_reshard)
 
     def absorb(self, other: "CostLedger") -> None:
         """Merge another ledger's charges in (serving: per-query ledgers
@@ -97,7 +100,7 @@ class CostLedger:
             hits=other.plane_hits, misses=other.plane_misses,
             evicted_bytes=other.plane_evicted_bytes,
             resident_bytes=other.plane_resident_bytes,
-            bytes_h2d=other.bytes_h2d)
+            bytes_h2d=other.bytes_h2d, bytes_reshard=other.bytes_reshard)
 
     def serving_summary(self) -> dict:
         """Plane-store counters for the Fig-9 breakdown / serving benchmark."""
@@ -107,6 +110,7 @@ class CostLedger:
             "plane_evicted_bytes": self.plane_evicted_bytes,
             "plane_resident_bytes": self.plane_resident_bytes,
             "bytes_h2d": self.bytes_h2d,
+            "bytes_reshard": self.bytes_reshard,
         }
 
     def wall_summary(self) -> dict:

@@ -48,7 +48,6 @@ from repro.core import generation, scaffold as scaffold_lib
 from repro.core.adj_target import adj_target
 from repro.core.bargain import bargain_precision_subset
 from repro.core.costs import CostLedger
-from repro.core.featurize import FeatureData, FeaturizationSpec
 from repro.core.refine import RefinementPump
 from repro.core.scaffold import Scaffold, min_fpr_thresholds
 
@@ -67,6 +66,10 @@ class FDJConfig:
     mc_trials: int = 20000
     block: int = 4096              # L/R block edge for step-2 evaluation
     engine: str = "numpy"          # numpy | pallas | sharded (repro.engine)
+    pods: int = 1                  # sharded engine: pod-axis width — builds a
+    #   3-D (pod, data, model) join mesh (distributed.mesh.make_join_mesh)
+    #   when > 1 and no explicit mesh is in engine_opts; execution-only,
+    #   never part of a serving plan key (same candidate set on any mesh)
     engine_opts: dict = dataclasses.field(default_factory=dict)
     #   extra get_engine kwargs (tile sizes etc.) — either flat kwargs for
     #   cfg.engine, or keyed per engine name ({"pallas": {...}, ...}) so a
@@ -327,6 +330,9 @@ def _get_engine(cfg: FDJConfig):
         opts = dict(opts.get(cfg.engine, {}))
     if cfg.engine == "numpy":
         opts.setdefault("block", cfg.block)
+    if cfg.engine == "sharded" and cfg.pods > 1 and "mesh" not in opts:
+        from repro.distributed.mesh import make_join_mesh
+        opts["mesh"] = make_join_mesh(n_pods=cfg.pods)
     return get_engine(cfg.engine, **opts)
 
 

@@ -21,8 +21,7 @@ store (serving/planes.py).
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Optional, Sequence
+from typing import Sequence
 
 import numpy as np
 

@@ -15,15 +15,10 @@ stable hash — repeated extraction of the same record yields the same value.
 from __future__ import annotations
 
 import dataclasses
-import hashlib
-import math
-from typing import Callable, Optional, Sequence
 
 import numpy as np
 
-from repro.core.costs import CostLedger, n_tokens
-from repro.core.featurize import FeatureData, FeaturizationSpec, vectorize
-from repro.core.llm import HashedNgramEmbedder, SimulatedOracle, _stable_hash
+from repro.core.llm import SimulatedOracle, _stable_hash
 
 
 # ---------------------------------------------------------------------------

@@ -6,6 +6,14 @@ op, multiplying ops inside while-loop bodies by the loop trip count
 (recovered from the loop-condition constant — scan-over-layers shows up as
 one while loop of n_periods iterations).
 
+``pod_crossing_stats(hlo_text, pod_size)`` additionally classifies each
+collective by whether any of its replica groups spans devices from more
+than one pod (device ``d`` belongs to pod ``d // pod_size`` under the
+mesh's pod-major flattening).  This is the multi-pod dry-run gate: the
+sharded join engine must show cross-pod collectives that move *only
+candidate counts* — never feature planes or masks (DESIGN.md §3,
+``launch/multipod_dryrun.py``).
+
 This is a structural estimate (result bytes ~ payload moved once); link-hop
 multipliers for multi-hop ICI rings are applied by the roofline layer, not
 here.
@@ -90,11 +98,72 @@ _OP_RE = re.compile(
     r"([a-z0-9\-]+)\(")
 
 
-def collective_bytes(hlo_text: str) -> CollectiveStats:
+_GROUPS_EXPLICIT = re.compile(r"replica_groups=\{(\{[^}]*\}(?:,\{[^}]*\})*)\}")
+_GROUPS_IOTA = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?")
+
+
+def parse_replica_groups(line: str) -> Optional[list]:
+    """Replica groups of one HLO op line as a list of device-id lists.
+
+    Handles both textual forms:
+      * explicit  — ``replica_groups={{0,1},{2,3}}``
+      * iota (v2) — ``replica_groups=[2,4]<=[8]`` with an optional
+        reshape+transpose, e.g. ``[4,2]<=[2,4]T(1,0)``: the id sequence is
+        iota over the source dims, transposed by the permutation, then
+        reshaped to (num_groups, group_size).
+    Returns None when the line carries no replica_groups annotation.
+    """
+    m = _GROUPS_EXPLICIT.search(line)
+    if m:
+        return [[int(x) for x in g.split(",") if x]
+                for g in re.findall(r"\{([^}]*)\}", m.group(1))]
+    m = _GROUPS_IOTA.search(line)
+    if m:
+        n_groups, group_size = int(m.group(1)), int(m.group(2))
+        src = [int(x) for x in m.group(3).split(",") if x]
+        total = 1
+        for d in src:
+            total *= d
+        if total != n_groups * group_size:   # malformed annotation
+            return None
+        ids = _iota_transpose(src, m.group(4))
+        return [ids[g * group_size: (g + 1) * group_size]
+                for g in range(n_groups)]
+    return None
+
+
+def _iota_transpose(src_dims: list, perm_str: Optional[str]) -> list:
+    total = 1
+    for d in src_dims:
+        total *= d
+    if not perm_str:
+        return list(range(total))
+    import numpy as np
+    perm = [int(x) for x in perm_str.split(",") if x]
+    return (np.arange(total).reshape(src_dims).transpose(perm)
+            .ravel().tolist())
+
+
+@dataclasses.dataclass
+class PodCrossingStats:
+    """Collective traffic split by pod locality (bytes are per-device
+    result bytes, while-loop trip counts applied)."""
+    cross_pod_bytes: float         # total bytes of pod-spanning collectives
+    intra_pod_bytes: float         # total bytes of pod-local collectives
+    cross_pod_ops: int
+    intra_pod_ops: int
+    max_cross_op_bytes: float      # largest single pod-spanning op
+    cross_kinds: dict              # opcode -> bytes for pod-spanning ops
+
+
+def _iter_collectives(hlo_text: str):
+    """Yield (kind, nbytes, op_line) for every collective op — the one
+    walk both accountants share: computation split, while-loop trip
+    multipliers, opcode matching (counted once, at -start for async
+    pairs), result-shape byte sizing."""
     comps = _split_computations(hlo_text)
     trips = _while_trip_counts(hlo_text, comps)
-    by_kind: dict = {k: 0.0 for k in COLLECTIVE_OPS}
-    n_ops = 0
     for name, lines in comps.items():
         mult = trips.get(name, 1)
         for line in lines:
@@ -102,11 +171,44 @@ def collective_bytes(hlo_text: str) -> CollectiveStats:
             if not m:
                 continue
             shape_str, opcode = m.group(1), m.group(2)
-            for kind in COLLECTIVE_OPS:
-                # count the op once (at -start for async pairs)
-                if opcode == kind or opcode == kind + "-start":
-                    by_kind[kind] += _shape_bytes(shape_str) * mult
-                    n_ops += 1
-                    break
+            kind = next((k for k in COLLECTIVE_OPS
+                         if opcode in (k, k + "-start")), None)
+            if kind is None:
+                continue
+            yield kind, _shape_bytes(shape_str) * mult, line
+
+
+def pod_crossing_stats(hlo_text: str, pod_size: int) -> PodCrossingStats:
+    """Classify every collective by whether its replica groups cross a pod
+    boundary (``pod = device_id // pod_size``, pod-major mesh flattening).
+
+    Ops without a parseable replica_groups annotation are conservatively
+    counted as cross-pod (a missing annotation usually means "all
+    devices", which spans pods whenever there is more than one).
+    """
+    out = PodCrossingStats(0.0, 0.0, 0, 0, 0.0, {})
+    for kind, nbytes, line in _iter_collectives(hlo_text):
+        groups = parse_replica_groups(line)
+        crossing = True
+        if groups is not None:
+            crossing = any(
+                len({d // pod_size for d in g}) > 1 for g in groups)
+        if crossing:
+            out.cross_pod_bytes += nbytes
+            out.cross_pod_ops += 1
+            out.max_cross_op_bytes = max(out.max_cross_op_bytes, nbytes)
+            out.cross_kinds[kind] = out.cross_kinds.get(kind, 0.0) + nbytes
+        else:
+            out.intra_pod_bytes += nbytes
+            out.intra_pod_ops += 1
+    return out
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    by_kind: dict = {k: 0.0 for k in COLLECTIVE_OPS}
+    n_ops = 0
+    for kind, nbytes, _ in _iter_collectives(hlo_text):
+        by_kind[kind] += nbytes
+        n_ops += 1
     total = float(sum(by_kind.values()))
     return CollectiveStats(total_bytes=total, by_kind=by_kind, n_ops=n_ops)

@@ -38,6 +38,34 @@ def make_host_mesh() -> Mesh:
     return jax.make_mesh((n, 1), ("data", "model"))
 
 
+def make_join_mesh(n_pods: int = 1, n_data: Optional[int] = None,
+                   n_model: int = 1) -> Mesh:
+    """A 3-D ``(pod, data, model)`` mesh for the sharded join engine.
+
+    Always carries all three axes — a degenerate ``(1, N, 1)`` request still
+    produces a pod axis of size 1, so the pod code path (hierarchical count
+    prefix-sum, per-pod R-band rotation) is exercised on any device count.
+    ``n_data`` defaults to whatever divides the available devices evenly
+    after pod/model are fixed.  The (2, 16, 16) dry-run mesh is
+    ``make_join_mesh(2, 16, 16)`` under a 512-device host override
+    (``launch/multipod_dryrun.py``).
+    """
+    n = len(jax.devices())
+    if n_data is None:
+        n_data = n // (n_pods * n_model)
+    if n_pods * n_data * n_model > n or n_data < 1:
+        raise ValueError(
+            f"join mesh ({n_pods}, {n_data}, {n_model}) needs "
+            f"{n_pods * max(n_data, 1) * n_model} devices, have {n}")
+    return jax.make_mesh((n_pods, n_data, n_model), ("pod", "data", "model"))
+
+
+def l_shard_axes(mesh: Mesh) -> tuple:
+    """Mesh axes the join engine shards L rows over: ("pod", "data") on a
+    pod mesh, ("data",) otherwise (DESIGN.md §3)."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
 @dataclasses.dataclass(frozen=True)
 class AxisEnv:
     """Resolved mesh-axis assignments for the logical names."""

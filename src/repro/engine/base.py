@@ -63,6 +63,12 @@ class EngineStats:
     # (planes already device-resident via serving.planes): 0 — the
     # invariant the FeaturePlaneStore exists to provide (DESIGN.md §4).
     bytes_h2d: int = 0
+    # bytes moved device -> device to lay store-resident planes out on the
+    # sharded engine's mesh.  Paid at most once per (plane set, mesh): the
+    # sharded assembly is memoized, so warm serving queries report 0 (the
+    # multi-pod serving invariant, DESIGN.md §4).  Always 0 for the
+    # single-device backends.
+    bytes_reshard: int = 0
 
     @property
     def plane_bytes(self) -> int:
@@ -75,6 +81,7 @@ class EngineStats:
             "n_candidates": self.n_candidates, "wall_s": self.wall_s,
             "bytes_to_host": self.bytes_to_host,
             "bytes_h2d": self.bytes_h2d,
+            "bytes_reshard": self.bytes_reshard,
             "plane_bytes": self.plane_bytes,
         }
 
@@ -90,6 +97,7 @@ class EngineStats:
             out.wall_s += d.wall_s
             out.bytes_to_host += d.bytes_to_host
             out.bytes_h2d += d.bytes_h2d
+            out.bytes_reshard += d.bytes_reshard
         return out
 
 
@@ -156,7 +164,7 @@ class CnfEngine(abc.ABC):
                                    n_candidates=len(cands),
                                    wall_s=time.perf_counter() - t_prev), 0)
             return
-        for idx, (pairs, nbytes, h2d) in enumerate(
+        for idx, (pairs, nbytes, h2d, reshard) in enumerate(
                 self._evaluate_stream(feats, clauses, thetas, n_l, n_r)):
             pairs = sorted(pairs)
             yield CandidateChunk(
@@ -164,17 +172,20 @@ class CnfEngine(abc.ABC):
                                    n_candidates=len(pairs),
                                    wall_s=time.perf_counter() - t_prev,
                                    bytes_to_host=nbytes,
-                                   bytes_h2d=h2d), idx)
+                                   bytes_h2d=h2d,
+                                   bytes_reshard=reshard), idx)
             t_prev = time.perf_counter()
 
     @abc.abstractmethod
     def _evaluate_stream(self, feats, clauses, thetas, n_l: int, n_r: int):
-        """Yields (pairs, bytes_to_host, bytes_h2d) per backend-defined
-        chunk; chunks must be disjoint and together cover the exact
-        candidate set.  ``bytes_h2d`` is the plane upload attributed to the
-        chunk (backends stage planes once, so only the first chunk of a
-        cold evaluation carries a nonzero value; 0 throughout when planes
-        are already device-resident)."""
+        """Yields (pairs, bytes_to_host, bytes_h2d, bytes_reshard) per
+        backend-defined chunk; chunks must be disjoint and together cover
+        the exact candidate set.  ``bytes_h2d`` is the plane upload
+        attributed to the chunk (backends stage planes once, so only the
+        first chunk of a cold evaluation carries a nonzero value; 0
+        throughout when planes are already device-resident);
+        ``bytes_reshard`` likewise carries the sharded backend's one-time
+        device-to-device mesh layout cost on the first chunk."""
 
 
 def corpus_shape(feats: Sequence, clauses: Sequence) -> tuple:

@@ -57,6 +57,44 @@ def compact_append(packed, buf, count, *, row_offset=0, col_offset=0):
     return buf, count + flat.sum()
 
 
+def hierarchical_offsets(count, *, inner_axes, inner_index, pod_axis=None):
+    """Global exclusive offset of this device's candidates, prefix-summed
+    hierarchically: within the pod first, then across pods (DESIGN.md §3).
+
+    count:       int32 scalar — this device's candidate count
+    inner_axes:  mesh axis names spanning one pod (e.g. ("data", "model"))
+    inner_index: this device's linear index over ``inner_axes`` (row-major
+                 in the given axis order) — a traced value from
+                 ``lax.axis_index`` composition
+    pod_axis:    the cross-pod axis name, or None on a single-pod mesh
+
+    Two collectives, both over *counts only*:
+
+      1. ``all_gather(count, inner_axes)`` — within-pod, one int32 per
+         device in the pod; the exclusive cumsum at ``inner_index`` is the
+         device's base inside its pod;
+      2. ``all_gather(pod_total, pod_axis)`` — the **only cross-pod
+         collective in the engine**, one int32 per pod.  This is the
+         multi-pod design invariant the dry-run asserts via
+         ``distributed.hlo_analysis``: inter-pod links carry candidate
+         counts, never feature planes or masks.
+
+    Returns (global_base int32, pod_counts) where ``pod_counts`` is the
+    within-pod gathered count vector (the host cross-checks its emission
+    bookkeeping against the returned bases).
+    """
+    pod_counts = lax.all_gather(count, inner_axes)            # (pod devs,)
+    excl = jnp.cumsum(pod_counts) - pod_counts
+    base = excl[inner_index]
+    if pod_axis is None:
+        return base, pod_counts
+    pod_total = pod_counts.sum()
+    totals = lax.all_gather(pod_total, pod_axis)              # counts only
+    p = lax.axis_index(pod_axis)
+    pod_base = (jnp.cumsum(totals) - totals)[p]
+    return pod_base + base, pod_counts
+
+
 def extract_pairs(packed, *, capacity, row_offset=0, col_offset=0):
     """One-shot compaction of a packed mask into a fresh buffer.
 

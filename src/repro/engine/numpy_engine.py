@@ -48,5 +48,5 @@ class NumpyEngine(CnfEngine):
                     continue
                 ii, jj = np.nonzero(ok)
                 out.extend(zip((il[ii]).tolist(), (jr[jj]).tolist()))
-            # host-resident compute: no device traffic in either direction
-            yield out, 0, 0
+            # host-resident compute: no device traffic in any direction
+            yield out, 0, 0, 0

@@ -1,35 +1,56 @@
-"""Sharded streaming backend: shard_map over the mesh "data" axis.
+"""Sharded streaming backend: shard_map over the mesh L-sharding axes.
 
 Layout (see DESIGN.md §3):
 
-  * L rows are sharded over the mesh's "data" axis — each device owns a
-    contiguous block of ``rows_shard = padded_n_l / n_dev`` rows (embedding
-    and scalar planes sliced with ``P(None, "data", ...)``);
-  * R is replicated and *streamed*: a host loop walks R in chunks of
-    ``r_chunk`` rows, so device-resident working state is
-    O(rows_shard · r_chunk), never O(rows_shard · n_r);
-  * per chunk the fused CNF Pallas kernel produces the packed uint32 mask
-    (grid = rows_shard/tl × r_chunk/tr tiles), which is immediately
-    compacted on-device into a per-chunk (i, j) candidate buffer via
+  * L rows are sharded over the mesh's L axes — ``("pod", "data")`` on a
+    multi-pod mesh, ``("data",)`` otherwise: each of the
+    ``l_shards = n_pods * n_data`` shards owns a contiguous block of
+    ``rows_shard = padded_n_l / l_shards`` rows (embedding and scalar
+    planes sliced with ``P(None, ("pod", "data"), ...)``);
+  * R is replicated (the within-pod broadcast) and *streamed*: a host
+    loop walks R in ``r_chunk``-column bands.  On a pod mesh the bands
+    are **round-robined across pods** — at host step ``k`` pod ``p``
+    works band ``(k + p * stride) % n_chunks`` — so the P pods occupy P
+    distinct column bands at any instant while every pod still covers
+    every band over the full sweep (its L shard exists nowhere else, so
+    it must).  Within a pod the band is split across the "model" axis:
+    each (data, model) device evaluates its L rows × an
+    ``r_chunk / n_model``-column sub-band.  Device-resident working
+    state stays O(rows_shard · r_chunk / n_model), never O(rows_shard ·
+    n_r);
+  * per step the fused CNF Pallas kernel produces the packed uint32 mask
+    (grid = rows_shard/tl × r_sub/tr tiles), which is immediately
+    compacted on-device into a per-device (i, j) candidate buffer via
     popcount + prefix-sum (engine.extract) — the mask never leaves HBM;
-  * after **each** chunk the host pulls one int32 count per device plus
-    the first ``count`` buffer rows (``jax.device_get``) and *emits* the
-    chunk's global pairs downstream: O(candidates) transfer total, and the
-    first candidates surface after one scan step instead of after the
-    whole R sweep.  Batch ``evaluate`` is a drain of this same stream.
+  * candidate counts are prefix-summed **hierarchically**: within each
+    pod first (all_gather over ("data", "model")), then across pods
+    (all_gather of the per-pod totals over "pod") —
+    ``extract.hierarchical_offsets``.  That cross-pod gather of int32
+    totals is the *only* collective that crosses a pod boundary: pod
+    interconnect carries candidate counts, never feature planes or
+    masks (asserted on the (2, 16, 16) dry-run via
+    ``distributed.hlo_analysis.pod_crossing_stats``);
+  * after **each** step the host pulls one int32 count plus one int32
+    global base per device and the first ``count`` buffer rows
+    (``jax.device_get``) and *emits* the step's global pairs downstream:
+    O(candidates) transfer total, and the first candidates surface after
+    one scan step.  Batch ``evaluate`` is a drain of this same stream.
 
-Each chunk is L-complete (all devices' row blocks × one R column band),
-so chunks partition the candidate set by R columns — disjoint by
-construction, sorted within the chunk by ``base.evaluate_stream``.
+Each step is L-complete (all shards' row blocks × one band per pod), so
+steps partition the candidate set — disjoint by construction, sorted
+within the chunk by ``base.evaluate_stream``.
 
 Capacity is bounded-and-retried, never silently truncated: the on-device
-count keeps growing past the buffer, the host detects overflow per chunk
-and reruns *that chunk* with a ≥4× buffer.  Padded rows/cols (tile
+count keeps growing past the buffer; overflow is detected per (pod,
+data, model) shard and the host reruns *that step* with a ≥4× buffer
+(SPMD programs share one buffer shape, so the retry recomputes every
+pod's band; only the step's emission changes).  Padded rows/cols (tile
 alignment) are filtered on the host — O(candidates) work.
 
-On CPU the kernel runs in interpret mode on a 1-device "data" mesh, so the
-same code path is exercised by tests; on a pod the identical program lowers
-onto the (16, 16) production mesh from ``distributed.mesh``.
+On CPU the kernel runs in interpret mode on a 1-device "data" mesh, so
+the same code path is exercised by tests; on a pod the identical program
+lowers onto the (16, 16) / (2, 16, 16) production meshes from
+``distributed.mesh`` (``make_join_mesh``).
 """
 
 from __future__ import annotations
@@ -59,26 +80,43 @@ def _default_mesh():
     return _HOST_MESH
 
 
+def _mesh_geometry(mesh):
+    """(l_axes, n_pods, n_data, n_model) for any engine-usable mesh."""
+    from repro.distributed.mesh import l_shard_axes
+    names = mesh.axis_names
+    if "data" not in names:
+        raise ValueError(f"mesh {names} has no 'data' axis")
+    n_pods = mesh.shape.get("pod", 1) if "pod" in names else 1
+    n_model = mesh.shape.get("model", 1) if "model" in names else 1
+    return l_shard_axes(mesh), n_pods, mesh.shape["data"], n_model
+
+
 class ShardedEngine(CnfEngine):
     name = "sharded"
 
     def __init__(self, mesh=None, *, tl: int = 128, tr: int = 128,
                  r_chunk: Optional[int] = None, capacity: Optional[int] = None,
                  interpret: Optional[bool] = None, use_kernel: bool = True):
-        """mesh: any mesh with a "data" axis (default: make_host_mesh()).
-        tl/tr: kernel tile edges (tr % 32 == 0).  r_chunk: R stream chunk
-        (multiple of tr; default 4*tr).  capacity: initial per-device
-        per-chunk candidate buffer (default heuristic, grows >=4x on
-        overflow).  use_kernel=False swaps the Pallas kernel for the jnp
-        reference — identical math, faster under CPU emulation."""
+        """mesh: any mesh with a "data" axis and optional "pod" / "model"
+        axes (default: the plane set's attached mesh, else
+        make_host_mesh()).  tl/tr: kernel tile edges (tr % 32 == 0).
+        r_chunk: R stream band (multiple of n_model*tr; default
+        4*tr*n_model).  capacity: initial per-device per-step candidate
+        buffer (default heuristic, grows >=4x on overflow).
+        use_kernel=False swaps the Pallas kernel for the jnp reference —
+        identical math, faster under CPU emulation (and the default-
+        sensible choice for many-device dry-run meshes)."""
         if tr % 32 != 0:
             raise ValueError(f"tr={tr} must be a multiple of 32 (packed mask)")
         self.mesh = mesh
         self.tl = int(tl)
         self.tr = int(tr)
-        self.r_chunk = int(r_chunk) if r_chunk else 4 * self.tr
-        if self.r_chunk % self.tr != 0:
-            raise ValueError(f"r_chunk={self.r_chunk} must be a multiple of tr={tr}")
+        self.r_chunk = int(r_chunk) if r_chunk else None
+        if self.r_chunk and self.r_chunk % self.tr != 0:
+            # necessary on any mesh; the full tr*n_model divisibility is
+            # checked once the mesh (and its model-axis width) is known
+            raise ValueError(
+                f"r_chunk={self.r_chunk} must be a multiple of tr={tr}")
         self.capacity = capacity
         self.interpret = interpret
         self.use_kernel = use_kernel
@@ -91,39 +129,63 @@ class ShardedEngine(CnfEngine):
     _programs: dict = {}               # build key -> jitted shard_map program
     _PROGRAM_CACHE_MAX = 32
 
+    def _resolve_r_chunk(self, n_model: int) -> int:
+        r_chunk = self.r_chunk if self.r_chunk else 4 * self.tr * n_model
+        if r_chunk % (self.tr * n_model) != 0:
+            raise ValueError(
+                f"r_chunk={r_chunk} must be a multiple of tr*n_model="
+                f"{self.tr * n_model} (each of the {n_model} model-axis "
+                f"devices kernels a whole-tile sub-band)")
+        return r_chunk
+
     # -- device program -----------------------------------------------------
 
-    def _build(self, mesh, kclauses, thetas, rows_shard, cap):
+    def _build(self, mesh, kclauses, thetas, rows_shard, cap, r_chunk,
+               n_chunks):
         # jax.jit caches on function identity; without memoizing here every
         # chunk step would re-trace and re-compile an identical program.
-        # The key carries every value the closure bakes in (the chunk index
-        # is a traced argument, so one program serves the whole R sweep).
+        # The key carries every value the closure bakes in (the step index
+        # is a traced argument, so one program serves the whole R sweep;
+        # n_chunks is baked into the per-pod band rotation).
         interpret = self.interpret
         if interpret is None:
             interpret = jax.default_backend() == "cpu"
-        key = (mesh, kclauses, thetas, rows_shard, cap,
-               self.tl, self.tr, self.r_chunk, self.use_kernel, interpret)
+        key = (mesh, kclauses, thetas, rows_shard, cap, r_chunk, n_chunks,
+               self.tl, self.tr, self.use_kernel, interpret)
         cached = ShardedEngine._programs.get(key)
         if cached is not None:
             return cached
         fn = self._build_uncached(mesh, kclauses, thetas, rows_shard, cap,
-                                  interpret)
+                                  r_chunk, n_chunks, interpret)
         while len(ShardedEngine._programs) >= self._PROGRAM_CACHE_MAX:
             ShardedEngine._programs.pop(next(iter(ShardedEngine._programs)))
         ShardedEngine._programs[key] = fn
         return fn
 
     def _build_uncached(self, mesh, kclauses, thetas, rows_shard, cap,
-                        interpret):
+                        r_chunk, n_chunks, interpret):
         from repro.kernels.fused_cnf_join import ref as cref
         from repro.kernels.fused_cnf_join.kernel import cnf_join_block
-        tl, tr, r_chunk = self.tl, self.tr, self.r_chunk
+        tl, tr = self.tl, self.tr
         use_kernel = self.use_kernel
+        l_axes, n_pods, n_data, n_model = _mesh_geometry(mesh)
+        has_pod = len(l_axes) == 2
+        has_model = "model" in mesh.axis_names
+        r_sub = r_chunk // n_model
+        # pods enter the band rotation evenly spread across the R extent
+        stride = max(1, n_chunks // n_pods)
+        inner_axes = ("data", "model") if has_model else ("data",)
 
         def body(emb_l, emb_r, scal_l, scal_r, k):
-            row0 = lax.axis_index("data") * rows_shard
-            erk = lax.dynamic_slice_in_dim(emb_r, k * r_chunk, r_chunk, axis=1)
-            srk = lax.dynamic_slice_in_dim(scal_r, k * r_chunk, r_chunk, axis=1)
+            pod = lax.axis_index("pod") if has_pod else jnp.int32(0)
+            data = lax.axis_index("data")
+            model = lax.axis_index("model") if has_model else jnp.int32(0)
+            shard = pod * n_data + data
+            row0 = shard * rows_shard
+            band = (k + pod * stride) % n_chunks
+            col0 = band * r_chunk + model * r_sub
+            erk = lax.dynamic_slice_in_dim(emb_r, col0, r_sub, axis=1)
+            srk = lax.dynamic_slice_in_dim(scal_r, col0, r_sub, axis=1)
             if use_kernel:
                 packed = cnf_join_block(emb_l, erk, scal_l, srk, kclauses,
                                         thetas, tl=tl, tr=tr,
@@ -133,14 +195,20 @@ class ShardedEngine(CnfEngine):
                     emb_l, erk, scal_l, srk, kclauses, thetas))
             buf, cnt = extract.extract_pairs(packed, capacity=cap,
                                              row_offset=row0,
-                                             col_offset=k * r_chunk)
-            return buf, cnt[None]
+                                             col_offset=col0)
+            base, _ = extract.hierarchical_offsets(
+                cnt, inner_axes=inner_axes,
+                inner_index=data * n_model + model,
+                pod_axis="pod" if has_pod else None)
+            return buf, cnt[None], base[None]
 
+        row_spec = l_axes[0] if len(l_axes) == 1 else l_axes
+        dev_axes = l_axes + (("model",) if has_model else ())
         fn = shard_map(
             body, mesh=mesh,
-            in_specs=(P(None, "data", None), P(None, None, None),
-                      P(None, "data"), P(None, None), P()),
-            out_specs=(P("data", None), P("data")),
+            in_specs=(P(None, row_spec, None), P(None, None, None),
+                      P(None, row_spec), P(None, None), P()),
+            out_specs=(P(dev_axes, None), P(dev_axes), P(dev_axes)),
             check_rep=False)   # pallas_call has no replication rule
         return jax.jit(fn)
 
@@ -150,54 +218,72 @@ class ShardedEngine(CnfEngine):
         from repro.kernels.fused_cnf_join import ops as cnf_ops
 
         if self.mesh is None:
-            self.mesh = _default_mesh()
+            # a serving plane set carries its store's mesh (pre-sharded
+            # residency, DESIGN.md §4); otherwise fall back to the host mesh
+            self.mesh = getattr(feats, "mesh", None) or _default_mesh()
         mesh = self.mesh
-        if "data" not in mesh.axis_names:
-            raise ValueError(f"mesh {mesh.axis_names} has no 'data' axis")
-        ndev = mesh.shape["data"]
+        l_axes, n_pods, n_data, n_model = _mesh_geometry(mesh)
+        l_shards = n_pods * n_data
+        r_chunk = self._resolve_r_chunk(n_model)
 
-        # pad L to a multiple of ndev*tl (equal shards, tile-aligned rows)
-        # and R to a multiple of r_chunk (whole stream steps).  stage_planes
-        # uploads a host pack once — or assembles on device from a resident
-        # plane set (serving store) with zero H2D.  On a multi-device mesh a
-        # store-resident (single-device) array is resharded device-to-device
-        # by jit, which still never re-pays the host link.
-        emb_l, emb_r, scal_l, scal_r, kclauses, _, _, h2d = \
-            cnf_ops.stage_planes(feats, clauses, tl=ndev * self.tl,
-                                 tr=self.r_chunk)
-        pl_n, pr_n = emb_l.shape[1], emb_r.shape[1]
-        rows_shard = pl_n // ndev
-        n_chunks = pr_n // self.r_chunk
-        args = (emb_l, emb_r, scal_l, scal_r)
+        # pad L to a multiple of l_shards*tl (equal shards, tile-aligned
+        # rows) and R to a multiple of r_chunk (whole stream steps).
+        # stage_planes uploads a host pack once directly onto the mesh
+        # layout — or assembles on device from a resident plane set
+        # (serving store) with zero H2D, paying a one-time D2D reshard
+        # that is memoized on the plane set (warm queries: 0 bytes).
+        staged = cnf_ops.stage_planes(feats, clauses, tl=l_shards * self.tl,
+                                      tr=r_chunk, mesh=mesh, l_axes=l_axes)
+        kclauses = staged.kclauses
+        pl_n, pr_n = staged.emb_l.shape[1], staged.emb_r.shape[1]
+        rows_shard = pl_n // l_shards
+        n_chunks = pr_n // r_chunk
+        args = staged.arrays
         thetas = tuple(float(t) for t in thetas)
 
         cap = self.capacity or max(4096, 4 * rows_shard)
         for k in range(n_chunks):
             while True:
-                fn = self._build(mesh, kclauses, thetas, rows_shard, cap)
-                buf, cnt = fn(*args, jnp.int32(k))
+                fn = self._build(mesh, kclauses, thetas, rows_shard, cap,
+                                 r_chunk, n_chunks)
+                buf, cnt, base = fn(*args, jnp.int32(k))
                 counts = np.asarray(jax.device_get(cnt))
                 if (counts <= cap).all():
                     break
                 # counts are exact true totals (extract never clamps), so one
-                # retry of this chunk sized >=4x (and >= the true max) suffices
+                # retry of this step sized >=4x (and >= the true max) suffices
                 cap = max(4 * cap, -(-int(max(counts)) // 1024) * 1024)
-            self.capacity = cap        # start here next chunk: no repeat retry
-            chunk_h2d = h2d if k == 0 else 0
-            bytes_to_host = counts.nbytes
+            self.capacity = cap        # start here next step: no repeat retry
+            bases = np.asarray(jax.device_get(base))
+            expect = np.cumsum(counts) - counts
+            if not np.array_equal(bases, expect):
+                raise RuntimeError(
+                    "hierarchical candidate-count prefix-sum disagrees with "
+                    f"host bookkeeping: device bases {bases.tolist()} vs "
+                    f"expected {expect.tolist()}")
+            chunk_h2d = staged.bytes_h2d if k == 0 else 0
+            chunk_reshard = staged.bytes_reshard if k == 0 else 0
+            bytes_to_host = counts.nbytes + bases.nbytes
+            # pull each device's first `count` buffer rows straight off its
+            # shard (no jit dispatch: a jnp slice of the global array would
+            # compile one distributed program per (device, count) pair —
+            # minutes of churn on a 512-device dry-run mesh).  The slice is
+            # the transfer a production DMA would move: O(candidates).
             out = []
-            for d in range(ndev):
+            for sh in buf.addressable_shards:
+                d = (sh.index[0].start or 0) // cap
                 take = int(counts[d])
                 if not take:
                     continue
-                seg = np.asarray(buf[d * cap: d * cap + take])  # O(cands) pull
+                seg = np.asarray(sh.data)[:take]
                 bytes_to_host += seg.nbytes
-                out.append(seg)
+                out.append((d, seg))
+            out = [seg for _, seg in sorted(out, key=lambda t: t[0])]
             if not out:
-                yield [], bytes_to_host, chunk_h2d
+                yield [], bytes_to_host, chunk_h2d, chunk_reshard
                 continue
             pairs = np.concatenate(out, axis=0)
             keep = (pairs[:, 0] < n_l) & (pairs[:, 1] < n_r)    # drop padding
             pairs = pairs[keep]
             yield (list(zip(pairs[:, 0].tolist(), pairs[:, 1].tolist())),
-                   bytes_to_host, chunk_h2d)
+                   bytes_to_host, chunk_h2d, chunk_reshard)

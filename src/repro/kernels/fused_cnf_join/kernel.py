@@ -26,7 +26,6 @@ VMEM budget per grid step (TL=256, TR=512, D=128, F=6):
 from __future__ import annotations
 
 import functools
-from typing import Sequence
 
 import jax
 import jax.numpy as jnp

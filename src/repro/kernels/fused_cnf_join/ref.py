@@ -7,10 +7,9 @@ and compared — what a straightforward XLA program would do.
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
-from repro.kernels.fused_cnf_join.kernel import SCAL, VEC
+from repro.kernels.fused_cnf_join.kernel import VEC
 
 
 def cnf_join_ref(emb_l, emb_r, scal_l, scal_r, clauses, thetas) -> jnp.ndarray:

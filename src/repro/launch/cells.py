@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.common.config import FFNKind, ModelConfig, SHAPES, ShapeConfig, TrainConfig
+from repro.common.config import FFNKind, ModelConfig, SHAPES, TrainConfig
 from repro.configs import LONG_CONTEXT_ARCHS, get_config
 from repro.distributed.mesh import AxisEnv, axis_size, batch_spec
 from repro.models import steps, transformer

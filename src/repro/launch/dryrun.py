@@ -19,7 +19,6 @@ import json
 import time
 import traceback
 
-import jax
 
 from repro.common.config import SHAPES
 from repro.configs import ARCH_IDS

@@ -14,7 +14,6 @@ from __future__ import annotations
 import argparse
 import json
 
-import numpy as np
 
 from repro.core.costs import naive_join_cost
 from repro.core.join import FDJConfig, fdj_join
@@ -26,7 +25,7 @@ from repro.engine import ENGINES
 def run_join(dataset: str = "police_records", target: float = 0.9,
              delta: float = 0.1, precision_target: float = 1.0,
              engine: str = "numpy", size: float = 1.0, seed: int = 0,
-             stream: bool = False) -> dict:
+             stream: bool = False, pods: int = 1) -> dict:
     gens = {
         "police_records": lambda: synth.police_records(
             n_incidents=int(300 * size), reports_per_incident=3, seed=seed),
@@ -40,7 +39,7 @@ def run_join(dataset: str = "police_records", target: float = 0.9,
     oracle = ds.make_oracle()
     cfg = FDJConfig(recall_target=target, delta=delta, engine=engine,
                     precision_target=precision_target, seed=seed,
-                    stream_refinement=stream)
+                    stream_refinement=stream, pods=pods)
     res = fdj_join(ds, oracle, SimulatedProposer(ds), SimulatedExtractor(ds, seed=seed), cfg)
     naive = naive_join_cost(ds.texts_l, ds.texts_r)
     return {
@@ -103,12 +102,17 @@ def main():
     ap.add_argument("--stream", action="store_true",
                     help="pipeline refinement over the step-② candidate "
                          "stream (FDJConfig.stream_refinement)")
+    ap.add_argument("--pods", type=int, default=1,
+                    help="pod-axis width for the sharded engine's 3-D "
+                         "(pod, data, model) join mesh (FDJConfig.pods; "
+                         "needs enough devices — see launch/multipod_dryrun "
+                         "for the emulated (2, 16, 16) dry-run)")
     ap.add_argument("--size", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     out = run_join(args.dataset, args.target, args.delta,
                    args.precision_target, args.engine, args.size, args.seed,
-                   stream=args.stream)
+                   stream=args.stream, pods=args.pods)
     print(json.dumps(out, indent=1))
 
 

@@ -8,7 +8,8 @@ dry-run must set ``XLA_FLAGS`` before any jax initialization.
 from __future__ import annotations
 
 from repro.distributed.mesh import (AxisEnv, axis_size, batch_spec,
-                                    make_host_mesh, make_production_mesh)
+                                    l_shard_axes, make_host_mesh,
+                                    make_join_mesh, make_production_mesh)
 
-__all__ = ["make_production_mesh", "make_host_mesh", "AxisEnv", "axis_size",
-           "batch_spec"]
+__all__ = ["make_production_mesh", "make_host_mesh", "make_join_mesh",
+           "l_shard_axes", "AxisEnv", "axis_size", "batch_spec"]

@@ -12,12 +12,10 @@ pass --mesh single|multi for the production meshes.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint import checkpoint as ckpt
 from repro.common.config import TrainConfig

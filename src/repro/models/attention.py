@@ -12,14 +12,13 @@ recorded in EXPERIMENTS.md §Perf.
 
 from __future__ import annotations
 
-import dataclasses
 import math
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.common.config import MLAConfig, ModelConfig
+from repro.common.config import ModelConfig
 from repro.models.layers import ParamDef, ParamTree
 
 

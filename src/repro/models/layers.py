@@ -10,14 +10,12 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any, Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.distributed.mesh import AxisEnv
-from jax.sharding import PartitionSpec as P
 
 
 @dataclasses.dataclass(frozen=True)

@@ -11,12 +11,11 @@ All state math in float32; projections in the model compute dtype.
 from __future__ import annotations
 
 import math
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.common.config import ModelConfig, SSMConfig
+from repro.common.config import ModelConfig
 from repro.models.layers import ParamDef, ParamTree, rms_norm
 
 

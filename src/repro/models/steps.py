@@ -7,8 +7,6 @@ distribution via the spec trees from ``transformer``.
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp

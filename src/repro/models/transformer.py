@@ -12,8 +12,7 @@ optional recurrent/KV state, and an aux-loss scalar (MoE).
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable, Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp

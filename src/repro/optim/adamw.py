@@ -9,8 +9,6 @@ the beyond-paper distributed-optimization lever for multi-pod training.
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp

@@ -15,14 +15,14 @@ real-LLM backend for FDJ's join/extraction calls.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence
+from typing import List, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.common.config import ModelConfig
-from repro.models import steps, transformer
+from repro.models import steps
 
 
 @dataclasses.dataclass

@@ -40,7 +40,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Optional, Sequence
+from typing import Callable, Optional
 
 import jax.numpy as jnp
 import numpy as np
@@ -50,7 +50,7 @@ from repro.core.featurize import vectorize
 from repro.core.join import (FDJConfig, JoinPlan, JoinResult, _get_engine,
                              execute_join, make_label_fn, plan_join)
 from repro.core.refine import RefinementPump
-from repro.serving.planes import (DevicePlaneSet, FeaturePlaneStore,
+from repro.serving.planes import (FeaturePlaneStore,
                                   corpus_fingerprint)
 
 
@@ -257,7 +257,9 @@ class JoinService:
             evicted_bytes=diff["evicted_bytes"],
             resident_bytes=diff["resident_bytes"],
             bytes_h2d=diff["bytes_to_device"]
-            + (jr.engine_stats.bytes_h2d if jr.engine_stats else 0))
+            + (jr.engine_stats.bytes_h2d if jr.engine_stats else 0),
+            bytes_reshard=(jr.engine_stats.bytes_reshard
+                           if jr.engine_stats else 0))
         self.ledger.absorb(qledger)
         self.queries += 1
         return ServeResult(join=jr, plan_hit=plan_hit, delta_rows=delta_rows,

@@ -97,12 +97,20 @@ class DevicePlaneSet(Sequence):
     ``corpus_shape`` use the Sequence-of-FeatureData protocol unchanged.
     ``pack_cache`` memoizes assembled kernel layouts per padded geometry so
     repeated warm queries skip even the on-device reshuffle.
+
+    ``mesh`` (inherited from the store) is the sharded engine's default
+    execution mesh for queries over this plane set: the engine lays the
+    assembled planes out over the mesh's L axes once (a device-to-device
+    reshard, memoized in ``pack_cache``), so repeated warm sharded queries
+    — including multi-pod (pod, data, model) meshes — report zero plane
+    reshard bytes (DESIGN.md §4).
     """
 
-    def __init__(self, feats: list, dev_l: list, dev_r: list):
+    def __init__(self, feats: list, dev_l: list, dev_r: list, *, mesh=None):
         self.feats = list(feats)
         self._dev_l = list(dev_l)
         self._dev_r = list(dev_r)
+        self.mesh = mesh
         self.pack_cache: dict = {}
 
     def __len__(self) -> int:
@@ -124,16 +132,25 @@ class DevicePlaneSet(Sequence):
         feats = [FeatureData(f.spec, f.kind, f.data_l, f.data_r[start:],
                              scale=f.scale) for f in self.feats]
         return DevicePlaneSet(feats, self._dev_l,
-                              [d[start:] for d in self._dev_r])
+                              [d[start:] for d in self._dev_r],
+                              mesh=self.mesh)
 
 
 class FeaturePlaneStore:
-    """Byte-budget LRU cache of device-resident featurization planes."""
+    """Byte-budget LRU cache of device-resident featurization planes.
+
+    ``mesh`` (optional) attaches an execution mesh — e.g. the 3-D
+    (pod, data, model) join mesh from ``distributed.mesh.make_join_mesh``
+    — to every served ``DevicePlaneSet``: the sharded engine picks it up
+    as its default mesh and memoizes the mesh-sharded kernel assembly on
+    the set, so warm sharded queries skip the D2D reshard entirely.
+    """
 
     _PROVIDED_CACHE_MAX = 4
 
-    def __init__(self, byte_budget: Optional[int] = None):
+    def __init__(self, byte_budget: Optional[int] = None, *, mesh=None):
         self.byte_budget = byte_budget
+        self.mesh = mesh
         self._entries: OrderedDict = OrderedDict()
         self._provided: OrderedDict = OrderedDict()
         #   (spec identities, fp_l, fp_r) -> (store version, DevicePlaneSet):
@@ -294,7 +311,7 @@ class FeaturePlaneStore:
                 dev_r.append(er.device)
             feats.append(FeatureData(spec, fd.kind, el.host, er.host,
                                      scale=fd.scale))
-        planes = DevicePlaneSet(feats, dev_l, dev_r)
+        planes = DevicePlaneSet(feats, dev_l, dev_r, mesh=self.mesh)
         # memoize only if the whole working set survived the build: a
         # byte_budget smaller than one query can evict this query's own
         # entries mid-build, and a memo would then serve evicted arrays

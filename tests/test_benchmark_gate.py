@@ -1,0 +1,176 @@
+"""The benchmark regression gate (benchmarks/run.py --check-against).
+
+Pure-host: exercises ``check_against`` on synthetic baseline/fresh JSON
+pairs — band semantics per metric class (wide for walls, tight for bytes
+and dollars, exact for counts/flags) and the lost-coverage rule.
+"""
+
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.abspath(
+    os.path.join(os.path.dirname(__file__), "..")))
+
+from benchmarks.run import _metric_band, check_against  # noqa: E402
+
+
+@pytest.fixture
+def gate_dirs(tmp_path, monkeypatch):
+    """(baseline_dir, write_fresh) with RESULTS_DIR redirected to tmp."""
+    import benchmarks.run as run_mod
+    fresh_dir = tmp_path / "results"
+    fresh_dir.mkdir()
+    monkeypatch.setattr(run_mod, "RESULTS_DIR", str(fresh_dir))
+    base_dir = tmp_path / "baseline"
+    base_dir.mkdir()
+
+    def write(kind, name, rows):
+        d = base_dir if kind == "base" else fresh_dir
+        with open(d / f"{name}.json", "w") as f:
+            json.dump(rows, f)
+
+    return str(base_dir), write
+
+
+def _row(**kw):
+    row = {"table": "t1", "engine": "numpy", "wall_s": 1.0,
+           "bytes_to_host": 1000, "candidates": 42,
+           "agrees_with_numpy": True}
+    row.update(kw)
+    return row
+
+
+def test_identical_results_pass(gate_dirs):
+    base, write = gate_dirs
+    write("base", "engines", [_row()])
+    write("fresh", "engines", [_row()])
+    assert check_against(base, ["engines"]) == []
+
+
+def test_wall_band_is_wide_but_bounded(gate_dirs):
+    base, write = gate_dirs
+    write("base", "engines", [_row(wall_s=1.0)])
+    write("fresh", "engines", [_row(wall_s=3.4)])   # < 1.0*2.5 + 1.0
+    assert check_against(base, ["engines"]) == []
+    write("fresh", "engines", [_row(wall_s=3.6)])   # > band
+    assert len(check_against(base, ["engines"])) == 1
+
+
+def test_byte_inflation_fails(gate_dirs):
+    base, write = gate_dirs
+    write("base", "engines", [_row(bytes_to_host=100_000)])
+    write("fresh", "engines", [_row(bytes_to_host=150_000)])
+    bad = check_against(base, ["engines"])
+    assert len(bad) == 1 and "bytes_to_host" in bad[0]
+
+
+def test_counts_and_flags_must_match_exactly(gate_dirs):
+    base, write = gate_dirs
+    write("base", "engines", [_row(candidates=42, agrees_with_numpy=True)])
+    write("fresh", "engines", [_row(candidates=41, agrees_with_numpy=False)])
+    bad = check_against(base, ["engines"])
+    assert len(bad) == 2
+
+
+def test_warm_extraction_dollars_cannot_reinflate(gate_dirs):
+    base, write = gate_dirs
+    row = {"engine": "sharded", "mode": "warm", "wall_s": 0.01,
+           "extraction_cost": 0.0, "bytes_to_device": 0,
+           "bytes_reshard": 0, "pairs": 10, "agrees_with_cold": True}
+    write("base", "serving", [row])
+    write("fresh", "serving", [dict(row, extraction_cost=0.02)])
+    bad = check_against(base, ["serving"])
+    assert len(bad) == 1 and "extraction_cost" in bad[0]
+    write("fresh", "serving", [dict(row, bytes_reshard=2048)])
+    bad = check_against(base, ["serving"])
+    assert len(bad) == 1 and "bytes_reshard" in bad[0]
+
+
+def test_zero_byte_baseline_must_stay_exactly_zero(gate_dirs):
+    """The generic byte band (1.1x + 1 KiB) must not apply to invariant
+    zeros — warm reshard/H2D creeping back to 1000 bytes is a regression
+    even though it is inside the slack."""
+    base, write = gate_dirs
+    row = {"engine": "sharded", "mode": "warm", "wall_s": 0.01,
+           "extraction_cost": 0.0, "bytes_to_device": 0,
+           "bytes_reshard": 0, "pairs": 10, "agrees_with_cold": True}
+    write("base", "serving", [row])
+    write("fresh", "serving", [dict(row, bytes_to_device=1000)])
+    bad = check_against(base, ["serving"])
+    assert len(bad) == 1 and "must stay zero" in bad[0]
+
+
+def test_crashed_gated_regime_fails_the_gate(gate_dirs):
+    """A regime that died before emitting results must fail the gate —
+    otherwise a non-strict run would drop its rows from the comparison
+    and report the gate as passed."""
+    base, write = gate_dirs
+    write("base", "engines", [_row()])
+    bad = check_against(base, [], crashed=["engines"])
+    assert len(bad) == 1 and "crashed" in bad[0]
+    # crashed regimes without a gate spec are not the gate's business
+    assert check_against(base, [], crashed=["table2"]) == []
+
+
+def test_lost_coverage_is_a_regression(gate_dirs):
+    base, write = gate_dirs
+    write("base", "engines", [_row(), _row(engine="sharded")])
+    write("fresh", "engines", [_row()])
+    bad = check_against(base, ["engines"])
+    assert len(bad) == 1 and "coverage lost" in bad[0]
+
+
+def test_new_fresh_rows_are_not_regressions(gate_dirs):
+    base, write = gate_dirs
+    write("base", "engines", [_row()])
+    write("fresh", "engines", [_row(), _row(engine="sharded")])
+    assert check_against(base, ["engines"]) == []
+
+
+def test_unknown_regime_and_missing_baseline_are_skipped(gate_dirs):
+    base, write = gate_dirs
+    write("fresh", "engines", [_row()])
+    # no engines.json baseline, and a regime with no gate spec at all
+    assert check_against(base, ["engines", "table2"]) == []
+
+
+def test_metric_band_classes():
+    assert _metric_band("wall_s") == ("wall", 2.5, 1.0)
+    assert _metric_band("t_first_s") == ("wall", 2.5, 1.0)
+    assert _metric_band("bytes_to_host")[:2] == ("bytes", 1.10)
+    assert _metric_band("extraction_cost")[:2] == ("cost", 1.10)
+    assert _metric_band("candidates") is None
+
+
+def test_wall_band_env_override(monkeypatch):
+    """Slower CI runners widen only the machine-dependent wall band."""
+    monkeypatch.setenv("FDJ_GATE_WALL_BAND", "6.0,30.0")
+    assert _metric_band("wall_s") == ("wall", 6.0, 30.0)
+    assert _metric_band("bytes_to_host")[:2] == ("bytes", 1.10)
+
+
+def test_unknown_regime_in_only_is_rejected():
+    import subprocess
+    here = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--fast", "--only",
+         "enginez"],
+        capture_output=True, text=True, cwd=here,
+        env={**os.environ,
+             "PYTHONPATH": os.path.join(here, "src")})
+    assert proc.returncode != 0
+    assert "unknown regime" in proc.stderr
+
+
+def test_committed_baselines_exist_for_gated_regimes():
+    """ci.sh points --check-against at benchmarks/baseline — the committed
+    JSONs must exist for every gated regime or the gate is a no-op."""
+    here = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    for name in ("engines", "pipeline", "serving"):
+        path = os.path.join(here, "benchmarks", "baseline", f"{name}.json")
+        assert os.path.exists(path), f"missing committed baseline {path}"
+        with open(path) as f:
+            assert json.load(f), f"empty baseline {path}"

@@ -11,7 +11,7 @@ from repro.core.adj_target import adj_target, failure_curve
 from repro.core.bargain import (bargain_precision_subset,
                                 optimal_cascade_threshold,
                                 recall_guarded_threshold, supg_threshold)
-from repro.core.scaffold import Scaffold, get_logical_scaffold, min_fpr_thresholds
+from repro.core.scaffold import get_logical_scaffold, min_fpr_thresholds
 
 
 def test_cost_to_cover_separable():

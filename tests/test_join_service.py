@@ -11,10 +11,8 @@ Invariants under test (ISSUE 3 acceptance criteria):
     guarantee holds in both the incremental and the replanned path.
 """
 
-import numpy as np
 import pytest
 
-from repro.core.costs import CostLedger
 from repro.core.join import FDJConfig, execute_join, fdj_join
 from repro.data import synth
 from repro.data.simulated_llm import SimulatedExtractor, SimulatedProposer

@@ -12,7 +12,7 @@ from repro.data import synth
 from repro.data.cnf_fixtures import representative_cnf
 from repro.data.simulated_llm import SimulatedExtractor
 from repro.kernels.fused_cnf_join import ops as cnf_ops
-from repro.serving.planes import (DevicePlaneSet, FeaturePlaneStore,
+from repro.serving.planes import (FeaturePlaneStore,
                                   corpus_fingerprint)
 
 
@@ -110,9 +110,10 @@ def test_stage_planes_reports_zero_h2d_for_resident_planes():
     ds = _police()
     _, _, planes, specs, clauses, _, _ = _provided(ds)
     feats = SimulatedExtractor(ds).materialize(specs, CostLedger())
-    *_, h2d_cold = cnf_ops.stage_planes(feats, clauses, tl=32, tr=64)
-    *_, h2d_warm = cnf_ops.stage_planes(planes, clauses, tl=32, tr=64)
-    assert h2d_cold > 0 and h2d_warm == 0
+    cold = cnf_ops.stage_planes(feats, clauses, tl=32, tr=64)
+    warm = cnf_ops.stage_planes(planes, clauses, tl=32, tr=64)
+    assert cold.bytes_h2d > 0 and warm.bytes_h2d == 0
+    assert cold.bytes_reshard == 0 and warm.bytes_reshard == 0
 
 
 def test_slice_r_views_delta_columns():

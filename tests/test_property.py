@@ -16,7 +16,7 @@ import jax.numpy as jnp
 from repro.core import generation
 from repro.core.costs import CostLedger
 from repro.core.featurize import FeaturizationSpec, vectorize
-from repro.core.scaffold import Scaffold, min_fpr_thresholds
+from repro.core.scaffold import min_fpr_thresholds
 from repro.kernels.fused_cnf_join import ref as cnf_ref
 from repro.kernels.fused_cnf_join.kernel import SCAL, VEC, cnf_join_block
 from repro.kernels.threshold_sweep.ops import sweep

@@ -9,7 +9,6 @@ run), and a slot that emits eos stops collecting tokens while the wave
 drains — with the whole wave stopping early once every slot is done.
 """
 
-import dataclasses
 
 import jax
 import numpy as np

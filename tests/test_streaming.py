@@ -7,7 +7,6 @@ empty scaffold, an all-missing feature column, and the sharded backend's
 overflow-retry path.
 """
 
-import numpy as np
 import pytest
 
 from repro.core.costs import CostLedger

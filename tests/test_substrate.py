@@ -4,7 +4,6 @@ serving engine batching equivalence."""
 
 import dataclasses
 import os
-import shutil
 
 import jax
 import jax.numpy as jnp
@@ -14,7 +13,7 @@ import pytest
 from repro.checkpoint import checkpoint as ckpt
 from repro.common.config import TrainConfig
 from repro.configs import get_smoke
-from repro.data.pipeline import (ByteTokenizer, PackedLMConfig, PackedLMDataset,
+from repro.data.pipeline import (PackedLMConfig, PackedLMDataset,
                                  PrefetchLoader)
 from repro.models import transformer as tr
 from repro.optim import adamw

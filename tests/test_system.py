@@ -5,7 +5,6 @@ guaranteed recall/precision, cost below naive on decomposable joins, the
 Fig-9 breakdown structure, and numpy/pallas engine equivalence.
 """
 
-import numpy as np
 import pytest
 
 pytestmark = pytest.mark.slow          # end-to-end joins: minutes, not tier-1
