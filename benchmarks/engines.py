@@ -64,6 +64,9 @@ def run(fast: bool = True):
             row = {"table": name, "engine": ename, "n_l": res.stats.n_l,
                    "n_r": res.stats.n_r, "candidates": res.stats.n_candidates,
                    "wall_s": round(res.stats.wall_s, 3),
+                   "dispatch_wall_s": round(res.stats.dispatch_wall_s, 4),
+                   "pull_wall_s": round(res.stats.pull_wall_s, 4),
+                   "overlap_s": round(res.stats.overlap_s, 4),
                    "bytes_to_host": res.stats.bytes_to_host,
                    "bytes_reshard": res.stats.bytes_reshard,
                    "plane_bytes": res.stats.plane_bytes,
@@ -72,7 +75,7 @@ def run(fast: bool = True):
             print(f"engines,{name},{ename},candidates={row['candidates']},"
                   f"bytes_to_host={row['bytes_to_host']},"
                   f"plane_bytes={row['plane_bytes']},wall_s={row['wall_s']},"
-                  f"agree={agree}")
+                  f"overlap_s={row['overlap_s']},agree={agree}")
             if not agree:
                 raise AssertionError(
                     f"engine {ename} disagrees with numpy on {name}")
@@ -88,6 +91,9 @@ def run_multipod(mesh: str = "2,16,16") -> list:
     row = {"table": "multipod_dryrun", "engine": f"sharded@{mesh}",
            "n_l": p["n_l"], "n_r": p["n_r"], "candidates": p["candidates"],
            "wall_s": rep["wall_s"], "bytes_to_host": p["bytes_to_host"],
+           "dispatch_wall_s": p["dispatch_wall_s"],
+           "pull_wall_s": p["pull_wall_s"],
+           "overlap_s": p["overlap_s"],
            "plane_bytes": p["plane_bytes"], "agrees_with_numpy": True,
            "cross_pod_collective_bytes": h["cross_pod_bytes"],
            "max_cross_pod_op_bytes": h["max_cross_op_bytes"],
@@ -100,6 +106,7 @@ def run_multipod(mesh: str = "2,16,16") -> list:
           f"plane_bytes={row['plane_bytes']},"
           f"cross_pod_bytes={row['cross_pod_collective_bytes']},"
           f"warm_reshard_bytes={row['warm_reshard_bytes']},"
+          f"overlap_s={row['overlap_s']},"
           f"wall_s={row['wall_s']}")
     return [row]
 

@@ -18,7 +18,17 @@ per row:
 
   * ``t_first_s`` — time to first candidate chunk (barrier: the full
     evaluate wall; the headline latency win of streaming);
-  * ``step2_wall`` / ``refine_wall`` / ``overlap_wall`` / ``total_wall``.
+  * ``step2_wall`` / ``refine_wall`` / ``overlap_wall`` / ``total_wall``;
+  * on stream rows, the engine-internal pipeline split
+    (``engine_dispatch_s`` / ``engine_pull_s`` / ``engine_overlap_s``).
+
+The regime then A/Bs the sharded engine's **double-buffered band loop**
+(DESIGN.md §3) against the forced-serial loop on a larger corpus, both
+through an identical pump: with double buffering, step k+1's kernel runs
+while the pump refines chunk k, so the engine's host-observed busy time
+(dispatch + pull walls) must come out strictly below the serial run's —
+asserted here, and the ``overlap_s`` baseline field lets ``run.py
+--check-against`` catch the pipeline silently degrading to serial.
 
 Usage:  PYTHONPATH=src python -m benchmarks.run --fast --only pipeline
 """
@@ -111,7 +121,10 @@ def run(fast: bool = True):
                      "step2_wall": round(pr.stats.step2_wall, 4),
                      "refine_wall": round(pr.stats.refine_wall, 4),
                      "overlap_wall": round(pr.stats.overlap_wall, 4),
-                     "total_wall": round(stream_total, 4)})
+                     "total_wall": round(stream_total, 4),
+                     "engine_dispatch_s": round(pr.stats.engine_dispatch_s, 4),
+                     "engine_pull_s": round(pr.stats.engine_pull_s, 4),
+                     "engine_overlap_s": round(pr.stats.engine_overlap_s, 4)})
 
         for row in rows[-2:]:
             print(f"pipeline,{row['engine']},{row['mode']},"
@@ -130,7 +143,75 @@ def run(fast: bool = True):
           f"streaming_wins={totals['stream'] <= totals['barrier']}")
     rows.append({"engine": "ALL", "mode": "summary", **{
         k + "_total": round(v, 4) for k, v in totals.items()}})
+    rows.append(run_double_buffer_ab(fast))
     return rows
+
+
+def run_double_buffer_ab(fast: bool = True) -> dict:
+    """Sharded double-buffered vs forced-serial band loop, same pump.
+
+    The corpus is sized so the R sweep takes several band steps (the
+    regime where the pipeline matters); refine latency is per-pair sleep
+    as above.  Acceptance (CI, via the committed baseline): the
+    double-buffered run's engine busy wall — the serial sum of its
+    dispatch + pull walls — is strictly below the serial run's, and its
+    ``overlap_s`` stays well clear of 0.
+    """
+    n = 100 if fast else 200
+    ds = synth.police_records(n_incidents=n, reports_per_incident=2, seed=0)
+    ext = SimulatedExtractor(ds)
+    specs, clauses, thetas = representative_cnf(ds)
+    feats = ext.materialize(specs, CostLedger())
+    opts = dict(tl=32, tr=32, r_chunk=32)      # ~7 band steps at n=100
+
+    out = {"engine": "sharded", "mode": "double_buffer_ab"}
+    oracle = get_engine("numpy", block=2048).evaluate(feats, clauses, thetas)
+    per_pair_s = min(0.25 / max(oracle.stats.n_candidates, 1), 2e-3)
+
+    def arm(label, db):
+        # warm the program cache so neither arm pays compile time
+        get_engine("sharded", **opts, double_buffer=db).evaluate(
+            feats, clauses, thetas)
+        eng = get_engine("sharded", **opts, double_buffer=db)
+        pump = RefinementPump(_refine_fn(per_pair_s),
+                              batch_pairs=_BATCH_PAIRS, max_queue_chunks=2)
+        t0 = time.perf_counter()
+        pr = pump.run(eng.evaluate_stream(feats, clauses, thetas))
+        total = time.perf_counter() - t0
+        assert sorted(pr.candidates) == oracle.candidates, \
+            f"double-buffer A/B ({label}) diverged from numpy"
+        es = pr.engine_stats
+        out[f"{label}_busy_s"] = round(es.dispatch_wall_s + es.pull_wall_s, 4)
+        out[f"{label}_total_wall"] = round(total, 4)
+        out[f"{label}_overlap_s"] = round(es.overlap_s, 4)
+        out["candidates"] = len(pr.candidates)
+
+    # the busy comparison is two host wall timings tens of ms apart, so a
+    # scheduler hiccup on a loaded CI box could invert a single-shot
+    # measurement: best-of-2 per arm before the strict assert (the
+    # *deterministic* degradation signal is the overlap_s floor, which no
+    # amount of machine noise can fake — serial scores exactly 0)
+    for attempt in range(2):
+        for label, db in (("db", True), ("serial", False)):
+            arm(label, db)
+        assert out["serial_overlap_s"] == 0.0, \
+            "forced-serial band loop reported overlap"
+        assert out["db_overlap_s"] > 0.0, \
+            "double-buffered band loop reported zero overlap"
+        if out["db_busy_s"] < out["serial_busy_s"]:
+            break
+    # the headline claim: overlapped engine wall strictly below the
+    # serial sum of dispatch + pull walls
+    assert out["db_busy_s"] < out["serial_busy_s"], (
+        f"double buffering did not beat the serial loop: "
+        f"{out['db_busy_s']}s vs {out['serial_busy_s']}s")
+    print(f"pipeline,sharded,double_buffer_ab,"
+          f"db_busy_s={out['db_busy_s']},"
+          f"serial_busy_s={out['serial_busy_s']},"
+          f"db_overlap_s={out['db_overlap_s']},"
+          f"db_total={out['db_total_wall']},"
+          f"serial_total={out['serial_total_wall']}")
+    return out
 
 
 def main(fast: bool):

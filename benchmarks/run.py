@@ -236,11 +236,13 @@ _GATES = {
         "metrics": ("wall_s", "bytes_to_host", "candidates",
                     "agrees_with_numpy", "cross_pod_collective_bytes",
                     "max_cross_pod_op_bytes", "warm_reshard_bytes",
-                    "warm_extraction_cost"),
+                    "warm_extraction_cost", "overlap_s"),
     },
     "pipeline": {
         "key": ("engine", "mode"),
-        "metrics": ("candidates", "t_first_s", "total_wall"),
+        "metrics": ("candidates", "t_first_s", "total_wall",
+                    "db_busy_s", "serial_busy_s", "db_overlap_s",
+                    "engine_overlap_s"),
     },
     "serving": {
         "key": ("engine", "mode"),
@@ -269,6 +271,14 @@ def _wall_band():
 
 def _metric_band(field: str):
     """(kind, rel, slack) for banded fields; None = exact match."""
+    if field.endswith("overlap_s"):
+        # a floor, not a ceiling: overlap seconds measure whether the
+        # double-buffered band loop actually kept a step in flight during
+        # host work.  The absolute value is machine-dependent, but the
+        # serial loop scores *exactly* 0 by construction — so a nonzero
+        # baseline collapsing to 0 means the pipeline silently degraded
+        # to serial, a perf regression the wall band alone may miss.
+        return ("floor", 0.0, 0.0)
     if "wall" in field or field.endswith("_s"):
         return ("wall",) + _wall_band()
     if "bytes" in field:
@@ -318,6 +328,12 @@ def check_against(baseline_dir: str, regimes, crashed=()) -> list:
                                    f"{b!r} -> {n!r} (must match exactly)")
                     continue
                 kind, rel, slack = band
+                if kind == "floor":
+                    if float(b) > 0.0 and (n is None or float(n) <= 0.0):
+                        bad.append(f"{name}{list(key)}.{field}: {b} -> {n} "
+                                   f"(overlap collapsed to 0: pipeline "
+                                   f"degraded to the serial loop)")
+                    continue
                 if kind != "wall" and float(b) == 0.0:
                     # a zero byte/dollar baseline is an invariant (warm
                     # reshard, warm extraction), not a measurement — the

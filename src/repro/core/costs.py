@@ -40,6 +40,14 @@ class CostLedger:
     step2_wall: float = 0.0      # candidate production (engine stream)
     refine_wall: float = 0.0     # oracle refinement
     overlap_wall: float = 0.0    # portion of the two that ran concurrently
+    # engine-internal pipeline split (sharded double buffering, DESIGN.md
+    # §3): host time enqueueing device steps vs blocked pulling/filtering,
+    # and the host work that ran with a successor step in flight.
+    # step2_overlap_wall == 0 on the sharded engine means the band loop
+    # degraded to serial — the regression the benchmark gate watches.
+    step2_dispatch_wall: float = 0.0
+    step2_pull_wall: float = 0.0
+    step2_overlap_wall: float = 0.0
     # serving counters (DESIGN.md §4): plane-store traffic for this query.
     # Counts, not dollars — the whole point of the store is that a plane
     # hit costs $0; reported via serving_summary(), kept out of total.
@@ -75,6 +83,21 @@ class CostLedger:
         self.refine_wall += refine
         self.overlap_wall += overlap
 
+    def record_engine_walls(self, dispatch: float, pull: float,
+                            overlap: float):
+        """Accumulate the engine-internal dispatch/pull/overlap split
+        (``EngineStats.dispatch_wall_s`` etc. of one evaluation)."""
+        self.step2_dispatch_wall += dispatch
+        self.step2_pull_wall += pull
+        self.step2_overlap_wall += overlap
+
+    def record_engine_stats(self, stats) -> None:
+        """Convenience: record an ``EngineStats``'s pipeline walls (no-op
+        for None, e.g. the degenerate-plan path)."""
+        if stats is not None:
+            self.record_engine_walls(stats.dispatch_wall_s,
+                                     stats.pull_wall_s, stats.overlap_s)
+
     def record_plane_traffic(self, *, hits: int = 0, misses: int = 0,
                              evicted_bytes: int = 0, resident_bytes: int = 0,
                              bytes_h2d: int = 0, bytes_reshard: int = 0):
@@ -96,6 +119,9 @@ class CostLedger:
         self.refinement += other.refinement
         self.record_walls(other.step2_wall, other.refine_wall,
                           other.overlap_wall)
+        self.record_engine_walls(other.step2_dispatch_wall,
+                                 other.step2_pull_wall,
+                                 other.step2_overlap_wall)
         self.record_plane_traffic(
             hits=other.plane_hits, misses=other.plane_misses,
             evicted_bytes=other.plane_evicted_bytes,
@@ -122,6 +148,9 @@ class CostLedger:
             "overlap_wall": self.overlap_wall,
             "pipelined_wall": self.step2_wall + self.refine_wall
             - self.overlap_wall,
+            "step2_dispatch_wall": self.step2_dispatch_wall,
+            "step2_pull_wall": self.step2_pull_wall,
+            "step2_overlap_wall": self.step2_overlap_wall,
         }
 
     @property

@@ -239,7 +239,7 @@ def execute_join(dataset, oracle, extractor, cfg: FDJConfig, plan: JoinPlan,
     engine_stats = None
     if cfg.stream_refinement:
         if plan.degenerate:
-            chunk_iter = iter([_degenerate_chunk(n_l, n_r)])
+            chunk_iter = _degenerate_chunks(n_l, n_r)
         else:
             chunk_iter = _stream_cnf(feats, plan.sc_local, plan.theta, cfg)
         if cfg.precision_target >= 1.0:
@@ -276,6 +276,7 @@ def execute_join(dataset, oracle, extractor, cfg: FDJConfig, plan: JoinPlan,
             out_pairs = _precision_extension(cand_arr, feats, label, cfg, rng)
         ledger.record_walls(engine_stats.wall_s if engine_stats else 0.0,
                             time.perf_counter() - t0, 0.0)
+        ledger.record_engine_stats(engine_stats)
 
     truth = dataset.truth_set
     tp = len(out_pairs & truth)
@@ -336,12 +337,15 @@ def _get_engine(cfg: FDJConfig):
     return get_engine(cfg.engine, **opts)
 
 
-def _degenerate_chunk(n_l: int, n_r: int):
-    """Refine-everything fallback as a single stream emission (stats-free,
-    mirroring the barrier fallback's engine_stats=None)."""
-    from repro.engine.base import CandidateChunk
-    pairs = [(i, j) for i in range(n_l) for j in range(n_r)]
-    return CandidateChunk(pairs, None, 0)
+def _degenerate_chunks(n_l: int, n_r: int):
+    """Refine-everything fallback as a bounded-chunk stream (stats-free,
+    mirroring the barrier fallback's engine_stats=None).  Chunked by the
+    same policy as the engines' vacuous-conjunction path so the
+    RefinementPump's bounded queue — not one host list — is what limits
+    resident pairs."""
+    from repro.engine.base import CandidateChunk, iter_cross_product_chunks
+    for idx, pairs in enumerate(iter_cross_product_chunks(n_l, n_r)):
+        yield CandidateChunk(pairs, None, idx)
 
 
 def _precision_extension(cand_pairs, feats, label, cfg: FDJConfig,

@@ -50,6 +50,14 @@ class PumpStats:
     total_wall: float = 0.0            # end-to-end pump wall
     chunks: int = 0
     batches: int = 0                   # oracle call batches issued
+    # engine-internal pipeline split (EngineStats sums; DESIGN.md §3): the
+    # double-buffered sharded backend keeps a band step in flight while
+    # the pump refines the previous chunk, so engine_overlap_s > 0 here
+    # means step ② compute hid under oracle refinement as well as under
+    # the engine's own host pulls.
+    engine_dispatch_s: float = 0.0
+    engine_pull_s: float = 0.0
+    engine_overlap_s: float = 0.0
 
 
 @dataclasses.dataclass
@@ -182,5 +190,10 @@ class RefinementPump:
                         if any(s is not None for s in chunk_stats) else None)
         if engine_stats is not None:
             engine_stats.n_candidates = len(candidates)
+            stats.engine_dispatch_s = engine_stats.dispatch_wall_s
+            stats.engine_pull_s = engine_stats.pull_wall_s
+            stats.engine_overlap_s = engine_stats.overlap_s
+            if ledger is not None:
+                ledger.record_engine_stats(engine_stats)
         return PumpResult(pairs=accepted, candidates=candidates,
                           engine_stats=engine_stats, stats=stats)

@@ -44,6 +44,24 @@ import dataclasses
 import time
 from typing import Iterator, Sequence
 
+# vacuous-conjunction (empty clause list) emissions are chunked so one host
+# list never materializes the whole n_l x n_r cross product: each chunk
+# covers whole L rows and holds at most ~this many pairs (one row minimum)
+VACUOUS_CHUNK_PAIRS = 1 << 16
+
+
+def iter_cross_product_chunks(n_l: int, n_r: int):
+    """Bounded row-block emission of the full n_l x n_r cross product:
+    yields row-major-sorted pair lists of whole L rows, each at most
+    ~VACUOUS_CHUNK_PAIRS pairs (one row minimum).  The single chunking
+    policy shared by the engines' vacuous-conjunction path and the
+    degenerate-plan stream in core.join — nothing for a degenerate
+    extent (n_l == 0 or n_r == 0)."""
+    rows_per = max(1, VACUOUS_CHUNK_PAIRS // max(n_r, 1))
+    for i0 in range(0, n_l, rows_per):
+        yield [(i, j) for i in range(i0, min(i0 + rows_per, n_l))
+               for j in range(n_r)]
+
 
 @dataclasses.dataclass
 class EngineStats:
@@ -53,6 +71,18 @@ class EngineStats:
     n_r: int = 0
     n_candidates: int = 0
     wall_s: float = 0.0
+    # host wall split for pipelined backends (sharded double buffering,
+    # DESIGN.md §3): dispatch_wall_s is time spent enqueueing device steps
+    # (async — no host sync), pull_wall_s is time blocked pulling counts/
+    # bases/candidate shards and filtering padding.  overlap_s is the
+    # portion of this chunk's host work (pull + consumer hold) during
+    # which a *successor* step was already in flight on the device — the
+    # serial loop scores exactly 0, so a pipeline silently degrading to
+    # serial is visible in accounting (benchmarks/run.py gates it).
+    # Whole-evaluation values are the per-chunk sums (``merged``).
+    dispatch_wall_s: float = 0.0
+    pull_wall_s: float = 0.0
+    overlap_s: float = 0.0
     # bytes moved device -> host to recover the candidate set.  The numpy
     # backend computes on the host (0 by definition); the pallas backend
     # pulls the packed n_l×n_r/8 bitmask; the sharded backend pulls only
@@ -79,6 +109,9 @@ class EngineStats:
         return {
             "engine": self.engine, "n_l": self.n_l, "n_r": self.n_r,
             "n_candidates": self.n_candidates, "wall_s": self.wall_s,
+            "dispatch_wall_s": self.dispatch_wall_s,
+            "pull_wall_s": self.pull_wall_s,
+            "overlap_s": self.overlap_s,
             "bytes_to_host": self.bytes_to_host,
             "bytes_h2d": self.bytes_h2d,
             "bytes_reshard": self.bytes_reshard,
@@ -95,6 +128,9 @@ class EngineStats:
         for d in deltas:
             out.n_candidates += d.n_candidates
             out.wall_s += d.wall_s
+            out.dispatch_wall_s += d.dispatch_wall_s
+            out.pull_wall_s += d.pull_wall_s
+            out.overlap_s += d.overlap_s
             out.bytes_to_host += d.bytes_to_host
             out.bytes_h2d += d.bytes_h2d
             out.bytes_reshard += d.bytes_reshard
@@ -105,6 +141,22 @@ class EngineStats:
 class EngineResult:
     candidates: list                   # sorted [(i, j), ...]
     stats: EngineStats
+
+
+@dataclasses.dataclass
+class ChunkDelta:
+    """One backend emission of ``_evaluate_stream``: the chunk's pairs plus
+    its per-chunk accounting.  Backends without a dispatch/pull split (the
+    host-resident numpy loop, the pallas mask pull) may instead yield the
+    legacy ``(pairs, bytes_to_host, bytes_h2d, bytes_reshard)`` tuple —
+    ``_stream_checked`` normalizes both forms."""
+    pairs: list
+    bytes_to_host: int = 0
+    bytes_h2d: int = 0
+    bytes_reshard: int = 0
+    dispatch_s: float = 0.0            # host time enqueueing device steps
+    pull_s: float = 0.0                # host time pulling + filtering
+    overlap_s: float = 0.0             # host work done with a step in flight
 
 
 @dataclasses.dataclass
@@ -157,29 +209,46 @@ class CnfEngine(abc.ABC):
     def _stream_checked(self, feats, clauses, thetas, n_l, n_r):
         t_prev = time.perf_counter()
         if not clauses:
-            # vacuous conjunction: admit everything without touching a backend
-            cands = [(i, j) for i in range(n_l) for j in range(n_r)]
-            yield CandidateChunk(
-                cands, EngineStats(self.name, n_l=n_l, n_r=n_r,
-                                   n_candidates=len(cands),
-                                   wall_s=time.perf_counter() - t_prev), 0)
+            # vacuous conjunction: admit everything without touching a
+            # backend — emitted in bounded row-block chunks so the stream
+            # (and a RefinementPump behind it) never holds one host list of
+            # the whole n_l x n_r cross product on a large corpus
+            idx = 0
+            for cands in iter_cross_product_chunks(n_l, n_r):
+                yield CandidateChunk(
+                    cands, EngineStats(self.name, n_l=n_l, n_r=n_r,
+                                       n_candidates=len(cands),
+                                       wall_s=time.perf_counter() - t_prev),
+                    idx)
+                idx += 1
+                t_prev = time.perf_counter()
+            if idx == 0:               # degenerate extent: one empty chunk
+                yield CandidateChunk(
+                    [], EngineStats(self.name, n_l=n_l, n_r=n_r,
+                                    wall_s=time.perf_counter() - t_prev), 0)
             return
-        for idx, (pairs, nbytes, h2d, reshard) in enumerate(
+        for idx, delta in enumerate(
                 self._evaluate_stream(feats, clauses, thetas, n_l, n_r)):
-            pairs = sorted(pairs)
+            if not isinstance(delta, ChunkDelta):
+                delta = ChunkDelta(*delta)
+            pairs = sorted(delta.pairs)
             yield CandidateChunk(
                 pairs, EngineStats(self.name, n_l=n_l, n_r=n_r,
                                    n_candidates=len(pairs),
                                    wall_s=time.perf_counter() - t_prev,
-                                   bytes_to_host=nbytes,
-                                   bytes_h2d=h2d,
-                                   bytes_reshard=reshard), idx)
+                                   dispatch_wall_s=delta.dispatch_s,
+                                   pull_wall_s=delta.pull_s,
+                                   overlap_s=delta.overlap_s,
+                                   bytes_to_host=delta.bytes_to_host,
+                                   bytes_h2d=delta.bytes_h2d,
+                                   bytes_reshard=delta.bytes_reshard), idx)
             t_prev = time.perf_counter()
 
     @abc.abstractmethod
     def _evaluate_stream(self, feats, clauses, thetas, n_l: int, n_r: int):
-        """Yields (pairs, bytes_to_host, bytes_h2d, bytes_reshard) per
-        backend-defined chunk; chunks must be disjoint and together cover
+        """Yields a ``ChunkDelta`` (or the legacy 4-tuple ``(pairs,
+        bytes_to_host, bytes_h2d, bytes_reshard)``) per backend-defined
+        chunk; chunks must be disjoint and together cover
         the exact candidate set.  ``bytes_h2d`` is the plane upload
         attributed to the chunk (backends stage planes once, so only the
         first chunk of a cold evaluation carries a nonzero value; 0

@@ -20,8 +20,34 @@ retries bigger.  Host traffic becomes O(candidates): one scalar count plus
 
 from __future__ import annotations
 
+import numpy as np
+
 import jax.numpy as jnp
 from jax import lax
+
+_CAP_QUANTUM = 1024                    # capacities round up to this
+
+
+def grow_caps(caps, counts):
+    """Per-shard capacity growth after an overflowed step (DESIGN.md §3).
+
+    caps:   int array, one sweep-carried capacity per (pod, data, model)
+            shard; counts: that step's exact per-shard candidate counts
+            (``compact_append`` never clamps, so they are true totals).
+
+    Only shards whose count exceeded their capacity grow — each to
+    ``max(4 * its own capacity, count rounded up to 1 KiB of rows)``.  The
+    ≥4× rule bounds retries per shard; applying it *per shard* means one
+    hot shard no longer compounds the whole sweep's buffer: the uniform
+    SPMD dispatch capacity is ``caps.max()``, and a later overflow on a
+    previously-cold shard grows from that shard's own small capacity, not
+    from the hot shard's inflated one.  Returns a new array; input caps
+    are never shrunk.
+    """
+    caps = np.asarray(caps, np.int64)
+    counts = np.asarray(counts, np.int64)
+    need = -(-counts // _CAP_QUANTUM) * _CAP_QUANTUM
+    return np.where(counts > caps, np.maximum(4 * caps, need), caps)
 
 
 def compact_append(packed, buf, count, *, row_offset=0, col_offset=0):

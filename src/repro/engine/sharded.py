@@ -30,11 +30,19 @@ Layout (see DESIGN.md §3):
     interconnect carries candidate counts, never feature planes or
     masks (asserted on the (2, 16, 16) dry-run via
     ``distributed.hlo_analysis.pod_crossing_stats``);
-  * after **each** step the host pulls one int32 count plus one int32
-    global base per device and the first ``count`` buffer rows
-    (``jax.device_get``) and *emits* the step's global pairs downstream:
-    O(candidates) transfer total, and the first candidates surface after
-    one scan step.  Batch ``evaluate`` is a drain of this same stream.
+  * the band loop is **double buffered**: step k+1 is dispatched (JAX
+    async dispatch — no host sync) *before* the host pulls step k's
+    counts, bases and candidate shards, so the next band's kernel runs
+    while the host filters padding, sorts, and the consumer holds the
+    previous chunk.  Per chunk the host pulls one int32 count plus one
+    int32 global base per device and the first ``count`` buffer rows
+    (``jax.device_get``): O(candidates) transfer total, and the first
+    candidates surface after one scan step.  Batch ``evaluate`` is a
+    drain of this same stream.  ``double_buffer=False`` forces the serial
+    loop (the benchmark A/B control).  Overlap is accounted, not assumed:
+    per-chunk ``dispatch_wall_s`` / ``pull_wall_s`` and an ``overlap_s``
+    that is exactly 0 when the loop degrades to serial
+    (``benchmarks/run.py`` gates it against the committed baselines).
 
 Each step is L-complete (all shards' row blocks × one band per pod), so
 steps partition the candidate set — disjoint by construction, sorted
@@ -42,10 +50,23 @@ within the chunk by ``base.evaluate_stream``.
 
 Capacity is bounded-and-retried, never silently truncated: the on-device
 count keeps growing past the buffer; overflow is detected per (pod,
-data, model) shard and the host reruns *that step* with a ≥4× buffer
-(SPMD programs share one buffer shape, so the retry recomputes every
-pod's band; only the step's emission changes).  Padded rows/cols (tile
-alignment) are filtered on the host — O(candidates) work.
+data, model) shard and the host reruns *that step* — invalidating and
+re-dispatching the in-flight step k+1 at the grown capacity, so a retry
+can never emit a chunk computed at a stale buffer size.  Capacities are
+carried **per shard** across the steps of one sweep (``extract.
+grow_caps``: only the overflowing shard grows ≥4×; the uniform SPMD
+dispatch buffer is the per-shard max), and they are *sweep-local*: a
+dense join grows buffers for its own remaining steps, never for later
+evaluations through a shared (serving) engine — ``self.capacity`` is
+construction-time config and is never mutated (the last sweep's final
+sizes are exposed as ``last_sweep_caps`` / ``last_sweep_capacity`` for
+tests and diagnostics).  Padded rows/cols (tile alignment) are filtered
+on the host — O(candidates) work.
+
+The engine itself is reusable across stores and meshes: the evaluation
+mesh is resolved per call (a mesh passed at construction wins; otherwise
+the plane set's attached mesh, else the shared host mesh) and never
+pinned on the instance.
 
 On CPU the kernel runs in interpret mode on a 1-device "data" mesh, so
 the same code path is exercised by tests; on a pod the identical program
@@ -55,6 +76,8 @@ lowers onto the (16, 16) / (2, 16, 16) production meshes from
 
 from __future__ import annotations
 
+import dataclasses
+import time
 from typing import Optional
 
 import numpy as np
@@ -66,7 +89,17 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.engine import extract
-from repro.engine.base import CnfEngine
+from repro.engine.base import ChunkDelta, CnfEngine
+
+
+@dataclasses.dataclass
+class _InFlight:
+    """One dispatched-but-unpulled band step of the double-buffered loop."""
+    k: int                             # host step index
+    cap: int                           # per-device buffer rows it was built at
+    buf: object                        # device arrays (futures until pulled)
+    cnt: object
+    base: object
 
 
 _HOST_MESH = None                      # shared default mesh: stable cache key
@@ -96,16 +129,22 @@ class ShardedEngine(CnfEngine):
 
     def __init__(self, mesh=None, *, tl: int = 128, tr: int = 128,
                  r_chunk: Optional[int] = None, capacity: Optional[int] = None,
-                 interpret: Optional[bool] = None, use_kernel: bool = True):
+                 interpret: Optional[bool] = None, use_kernel: bool = True,
+                 double_buffer: bool = True):
         """mesh: any mesh with a "data" axis and optional "pod" / "model"
-        axes (default: the plane set's attached mesh, else
-        make_host_mesh()).  tl/tr: kernel tile edges (tr % 32 == 0).
-        r_chunk: R stream band (multiple of n_model*tr; default
-        4*tr*n_model).  capacity: initial per-device per-step candidate
-        buffer (default heuristic, grows >=4x on overflow).
+        axes.  When None, the mesh is resolved *per evaluation* — the
+        plane set's attached mesh, else make_host_mesh() — so one engine
+        can serve stores on different meshes; only a mesh passed here is
+        honored across evaluations.  tl/tr: kernel tile edges
+        (tr % 32 == 0).  r_chunk: R stream band (multiple of n_model*tr;
+        default 4*tr*n_model).  capacity: initial per-device per-step
+        candidate buffer (default heuristic); overflow grows a per-shard
+        working copy >=4x within the sweep, never this config value.
         use_kernel=False swaps the Pallas kernel for the jnp reference —
         identical math, faster under CPU emulation (and the default-
-        sensible choice for many-device dry-run meshes)."""
+        sensible choice for many-device dry-run meshes).
+        double_buffer=False forces the serial band loop (A/B control for
+        the pipeline benchmark)."""
         if tr % 32 != 0:
             raise ValueError(f"tr={tr} must be a multiple of 32 (packed mask)")
         self.mesh = mesh
@@ -120,6 +159,19 @@ class ShardedEngine(CnfEngine):
         self.capacity = capacity
         self.interpret = interpret
         self.use_kernel = use_kernel
+        self.double_buffer = bool(double_buffer)
+        # diagnostics only (tests, the dry-run report): the per-shard
+        # capacities the most recent sweep ended at.  Not config — the
+        # next evaluation starts from ``self.capacity`` again.
+        self.last_sweep_caps: Optional[np.ndarray] = None
+
+    @property
+    def last_sweep_capacity(self) -> int:
+        """Max per-shard capacity the most recent sweep ended at (0 if the
+        engine has not evaluated yet)."""
+        if self.last_sweep_caps is None:
+            return 0
+        return int(self.last_sweep_caps.max())
 
     # class-level: engines are often constructed per join (get_engine in
     # core/join.py), so an instance cache would always be cold.  Bounded:
@@ -214,16 +266,23 @@ class ShardedEngine(CnfEngine):
 
     # -- evaluation ---------------------------------------------------------
 
+    def _resolve_mesh(self, feats):
+        """The evaluation mesh for this call — resolved fresh every time.
+
+        A mesh passed at construction always wins; otherwise a serving
+        plane set carries its store's mesh (pre-sharded residency,
+        DESIGN.md §4), else the shared host mesh.  Never cached on the
+        instance: an engine reused across stores/joins with different
+        meshes must not keep the first plane set's mesh."""
+        return self.mesh or getattr(feats, "mesh", None) or _default_mesh()
+
     def _evaluate_stream(self, feats, clauses, thetas, n_l, n_r):
         from repro.kernels.fused_cnf_join import ops as cnf_ops
 
-        if self.mesh is None:
-            # a serving plane set carries its store's mesh (pre-sharded
-            # residency, DESIGN.md §4); otherwise fall back to the host mesh
-            self.mesh = getattr(feats, "mesh", None) or _default_mesh()
-        mesh = self.mesh
+        mesh = self._resolve_mesh(feats)
         l_axes, n_pods, n_data, n_model = _mesh_geometry(mesh)
         l_shards = n_pods * n_data
+        n_dev = l_shards * n_model
         r_chunk = self._resolve_r_chunk(n_model)
 
         # pad L to a multiple of l_shards*tl (equal shards, tile-aligned
@@ -241,20 +300,57 @@ class ShardedEngine(CnfEngine):
         args = staged.arrays
         thetas = tuple(float(t) for t in thetas)
 
-        cap = self.capacity or max(4096, 4 * rows_shard)
-        for k in range(n_chunks):
-            while True:
-                fn = self._build(mesh, kclauses, thetas, rows_shard, cap,
-                                 r_chunk, n_chunks)
-                buf, cnt, base = fn(*args, jnp.int32(k))
-                counts = np.asarray(jax.device_get(cnt))
-                if (counts <= cap).all():
-                    break
-                # counts are exact true totals (extract never clamps), so one
-                # retry of this step sized >=4x (and >= the true max) suffices
-                cap = max(4 * cap, -(-int(max(counts)) // 1024) * 1024)
-            self.capacity = cap        # start here next step: no repeat retry
-            bases = np.asarray(jax.device_get(base))
+        # per-(pod, data, model)-shard capacities, local to THIS sweep:
+        # growth persists across the sweep's remaining steps but never
+        # mutates the engine — a shared serving engine that once hit a
+        # dense join must not over-allocate every later query.
+        caps = np.full(n_dev, self.capacity or max(4096, 4 * rows_shard),
+                       np.int64)
+        timing = {"dispatch": 0.0}
+
+        def dispatch(k) -> Optional[_InFlight]:
+            """Enqueue band step k at the current uniform capacity (JAX
+            async dispatch: returns futures, no host sync)."""
+            if k >= n_chunks:
+                return None
+            cap = int(caps.max())
+            t0 = time.perf_counter()
+            fn = self._build(mesh, kclauses, thetas, rows_shard, cap,
+                             r_chunk, n_chunks)
+            buf, cnt, base = fn(*args, jnp.int32(k))
+            timing["dispatch"] += time.perf_counter() - t0
+            return _InFlight(k, cap, buf, cnt, base)
+
+        step = dispatch(0)
+        hold_overlap = 0.0             # consumer hold with a step in flight
+        while step is not None:
+            k = step.k
+            # double buffering: enqueue step k+1 BEFORE blocking on step
+            # k's pull, so the next band computes while the host filters,
+            # sorts and the consumer holds this chunk
+            nxt = dispatch(k + 1) if self.double_buffer else None
+            t_pull0 = time.perf_counter()
+            bytes_to_host = 0
+            counts = np.asarray(jax.device_get(step.cnt))
+            bytes_to_host += counts.nbytes
+            while (counts > step.cap).any():
+                # overflow: grow only the overflowing shards (>=4x each,
+                # extract.grow_caps); counts are exact true totals, so the
+                # retried step — dispatched at the new per-shard max —
+                # cannot overflow again.  The in-flight step k+1 was built
+                # at the stale capacity: invalidate it (drop the futures)
+                # and re-dispatch it right after the retry so the pipeline
+                # stays full and no chunk is ever emitted at a stale size.
+                caps[:] = extract.grow_caps(caps, counts)
+                t_retry0 = time.perf_counter()
+                step = dispatch(k)
+                nxt = dispatch(k + 1) if self.double_buffer else None
+                t_pull0 += time.perf_counter() - t_retry0   # it's dispatch,
+                counts = np.asarray(jax.device_get(step.cnt))  # not pull
+                bytes_to_host += counts.nbytes
+            cap = step.cap
+            bases = np.asarray(jax.device_get(step.base))
+            bytes_to_host += bases.nbytes
             expect = np.cumsum(counts) - counts
             if not np.array_equal(bases, expect):
                 raise RuntimeError(
@@ -263,14 +359,13 @@ class ShardedEngine(CnfEngine):
                     f"expected {expect.tolist()}")
             chunk_h2d = staged.bytes_h2d if k == 0 else 0
             chunk_reshard = staged.bytes_reshard if k == 0 else 0
-            bytes_to_host = counts.nbytes + bases.nbytes
             # pull each device's first `count` buffer rows straight off its
             # shard (no jit dispatch: a jnp slice of the global array would
             # compile one distributed program per (device, count) pair —
             # minutes of churn on a 512-device dry-run mesh).  The slice is
             # the transfer a production DMA would move: O(candidates).
             out = []
-            for sh in buf.addressable_shards:
+            for sh in step.buf.addressable_shards:
                 d = (sh.index[0].start or 0) // cap
                 take = int(counts[d])
                 if not take:
@@ -279,11 +374,28 @@ class ShardedEngine(CnfEngine):
                 bytes_to_host += seg.nbytes
                 out.append((d, seg))
             out = [seg for _, seg in sorted(out, key=lambda t: t[0])]
-            if not out:
-                yield [], bytes_to_host, chunk_h2d, chunk_reshard
-                continue
-            pairs = np.concatenate(out, axis=0)
-            keep = (pairs[:, 0] < n_l) & (pairs[:, 1] < n_r)    # drop padding
-            pairs = pairs[keep]
-            yield (list(zip(pairs[:, 0].tolist(), pairs[:, 1].tolist())),
-                   bytes_to_host, chunk_h2d, chunk_reshard)
+            if out:
+                arr = np.concatenate(out, axis=0)
+                keep = (arr[:, 0] < n_l) & (arr[:, 1] < n_r)  # drop padding
+                arr = arr[keep]
+                pairs = list(zip(arr[:, 0].tolist(), arr[:, 1].tolist()))
+            else:
+                pairs = []
+            pull_s = time.perf_counter() - t_pull0
+            dispatch_s, timing["dispatch"] = timing["dispatch"], 0.0
+            # overlap accounting: host work done while a successor step was
+            # in flight on the device — this pull/filter window, plus the
+            # time the consumer held the previous chunk.  Exactly 0 for the
+            # serial loop, so a pipeline that silently degrades to serial
+            # is visible in EngineStats (and gated in benchmarks/run.py).
+            overlap_s = (pull_s if nxt is not None else 0.0) + hold_overlap
+            t_yield = time.perf_counter()
+            yield ChunkDelta(pairs, bytes_to_host, chunk_h2d, chunk_reshard,
+                             dispatch_s=dispatch_s, pull_s=pull_s,
+                             overlap_s=overlap_s)
+            hold = time.perf_counter() - t_yield
+            hold_overlap = hold if nxt is not None else 0.0
+            if nxt is None:            # serial mode (or a just-grown retry
+                nxt = dispatch(k + 1)  # tail): enqueue only after the emit
+            step = nxt
+        self.last_sweep_caps = caps.copy()

@@ -7,8 +7,11 @@ code and tests see the real device count) and validates the multi-pod
 engine end to end:
 
   * **parity**   — sharded-on-pod-mesh candidates ≡ the numpy oracle on a
-    ragged corpus, plus the capacity-1 overflow fixture (every chunk
-    overflows; the ≥4× retry must recover the full cross product);
+    ragged corpus, with the double-buffered band loop required to report
+    nonzero overlap on the multi-step sweep, plus the capacity-1 overflow
+    fixture (every chunk overflows; the ≥4× per-shard retry must recover
+    the full cross product without mutating the engine's configured
+    capacity);
   * **stream**   — per-step chunks are disjoint and their union ≡ batch;
   * **serving**  — a ``JoinService`` over a mesh-attached
     ``FeaturePlaneStore``: the warm repeated sharded query must charge $0
@@ -98,7 +101,16 @@ def _check_parity(mesh, rep: dict, *, tl, tr, r_chunk, use_kernel) -> None:
         "bytes_to_host": s.bytes_to_host, "bytes_h2d": s.bytes_h2d,
         "bytes_reshard": s.bytes_reshard, "plane_bytes": s.plane_bytes,
         "wall_s": round(s.wall_s, 3),
+        "dispatch_wall_s": round(s.dispatch_wall_s, 4),
+        "pull_wall_s": round(s.pull_wall_s, 4),
+        "overlap_s": round(s.overlap_s, 4),
     }
+    # the R sweep takes >= 2 steps here (corpus sized for it), so the
+    # double-buffered band loop must have kept a successor step in flight
+    # during host pulls: overlap_s == 0 means it degraded to serial
+    assert s.overlap_s > 0, (
+        "double-buffered band loop reported zero overlap on a multi-step "
+        "sweep — the pipeline degraded to the serial loop")
     # host traffic must scale with candidates (8 B per pulled pair, plus
     # one count + one base int32 per device per step), never with the
     # O(n_l*n_r) plane
@@ -131,9 +143,10 @@ def _check_parity(mesh, rep: dict, *, tl, tr, r_chunk, use_kernel) -> None:
     res1 = eng1.evaluate(dense, [[0]], [0.5])
     want = [(i, j) for i in range(n) for j in range(n)]
     assert res1.candidates == want, "overflow retry truncated candidates"
-    assert eng1.capacity >= 4, "capacity did not grow >=4x"
+    assert eng1.last_sweep_capacity >= 4, "capacity did not grow >=4x"
+    assert eng1.capacity == 1, "overflow mutated the configured capacity"
     rep["overflow"] = {"candidates": len(res1.candidates),
-                      "final_capacity": int(eng1.capacity)}
+                      "final_capacity": int(eng1.last_sweep_capacity)}
 
 
 def _check_serving(mesh, rep: dict, *, tl, tr, r_chunk, use_kernel) -> None:

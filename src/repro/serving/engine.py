@@ -51,6 +51,11 @@ class ServeEngine:
         tokens = np.zeros((b, pmax), np.int32)
         valid_from = np.full(b, pmax, np.int32)      # empty slots: all pad
         for s, r in enumerate(wave):
+            # a Request resubmitted to run() (retry, or reuse across
+            # engines) must not carry the previous run's decode state: the
+            # eos / max_new_tokens checks below read out_tokens, so stale
+            # tokens would silently truncate or suppress this run
+            r.out_tokens = []
             tokens[s, pmax - lens[s]:] = r.prompt
             valid_from[s] = pmax - lens[s]
         # logical (RoPE) positions start at 0 for each request's first real

@@ -324,6 +324,7 @@ class JoinService:
                 accepted = {p for p, l in zip(delta_cands, labs) if l}
                 qledger.record_walls(res.stats.wall_s,
                                      time.perf_counter() - t0, 0.0)
+                qledger.record_engine_stats(engine_stats)
 
         out_pairs = set(cached.pairs) | accepted
         if plan.degenerate:

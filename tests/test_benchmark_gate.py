@@ -143,6 +143,29 @@ def test_metric_band_classes():
     assert _metric_band("bytes_to_host")[:2] == ("bytes", 1.10)
     assert _metric_band("extraction_cost")[:2] == ("cost", 1.10)
     assert _metric_band("candidates") is None
+    # overlap seconds are a floor (degradation-to-serial detector), never
+    # the machine-dependent wall ceiling
+    assert _metric_band("overlap_s")[0] == "floor"
+    assert _metric_band("db_overlap_s")[0] == "floor"
+    assert _metric_band("engine_overlap_s")[0] == "floor"
+
+
+def test_overlap_floor_fails_only_on_collapse_to_zero(gate_dirs):
+    """A nonzero overlap_s baseline collapsing to 0 means the double-
+    buffered band loop silently degraded to serial — a regression even
+    when the wall band is satisfied.  Any nonzero value passes (the
+    absolute magnitude is machine-dependent), and a zero baseline (the
+    single-chunk or non-pipelined rows) constrains nothing."""
+    base, write = gate_dirs
+    write("base", "engines", [_row(overlap_s=0.04)])
+    write("fresh", "engines", [_row(overlap_s=0.001)])   # smaller is fine
+    assert check_against(base, ["engines"]) == []
+    write("fresh", "engines", [_row(overlap_s=0.0)])     # collapse fails
+    bad = check_against(base, ["engines"])
+    assert len(bad) == 1 and "degraded to the serial loop" in bad[0]
+    write("base", "engines", [_row(overlap_s=0.0)])      # zero baseline
+    write("fresh", "engines", [_row(overlap_s=0.0)])
+    assert check_against(base, ["engines"]) == []
 
 
 def test_wall_band_env_override(monkeypatch):

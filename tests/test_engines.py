@@ -126,7 +126,8 @@ def test_sharded_capacity_one_forces_retry_on_every_chunk():
     eng = get_engine("sharded", tl=32, tr=32, r_chunk=32, capacity=1)
     res = eng.evaluate(feats, [[0]], [0.5])
     assert res.candidates == want
-    assert eng.capacity >= 4                   # grew by >=4x, never clamped
+    assert eng.last_sweep_capacity >= 4        # grew by >=4x, never clamped
+    assert eng.capacity == 1                   # config survives the sweep
 
     eng2 = get_engine("sharded", tl=32, tr=32, r_chunk=32, capacity=1)
     chunks = list(eng2.evaluate_stream(feats, [[0]], [0.5]))
@@ -134,6 +135,31 @@ def test_sharded_capacity_one_forces_retry_on_every_chunk():
     for ch in chunks:                          # each chunk complete, counted
         assert len(ch.candidates) == ch.stats.n_candidates > 0
     assert sorted(p for ch in chunks for p in ch.candidates) == want
+
+
+def test_sharded_capacity_growth_is_sweep_local():
+    """A shared (serving) engine that once hit a dense join must not
+    over-allocate every later query: capacity growth persists across the
+    steps of one sweep only, never on the engine."""
+    n = 40
+    spec = FeaturizationSpec("name", "", "word_overlap", "llm", "name")
+    dense = [vectorize(spec, ["same text"] * n, ["same text"] * n)]
+    sparse = [vectorize(spec, ["aaa bbb"] * n, ["zzz yyy"] * n)]
+    eng = get_engine("sharded", tl=32, tr=32, r_chunk=64, capacity=64)
+
+    res = eng.evaluate(dense, [[0]], [0.5])
+    assert len(res.candidates) == n * n
+    assert eng.last_sweep_capacity >= 4 * 64   # the dense sweep grew
+    assert eng.capacity == 64                  # ...but not the config
+
+    res2 = eng.evaluate(sparse, [[0]], [0.25])  # nothing matches
+    assert res2.candidates == []
+    # the sparse sweep started from the configured capacity, not the
+    # dense join's grown one (the cross-join leak this test pins)
+    assert eng.last_sweep_capacity == 64
+    # per-shard vector exposed for diagnostics: uniform on this 1-device
+    # mesh, and exactly the configured value after the clean sweep
+    assert list(eng.last_sweep_caps) == [64]
 
 
 def test_sharded_host_bytes_scale_with_candidates():

@@ -94,6 +94,61 @@ ENTRY %main (x: s32[1]) -> (s32[8], s32[2]) {
     assert st1.cross_pod_ops == 0 and st1.intra_pod_ops == 2
 
 
+def test_sharded_engine_mesh_resolved_per_evaluation(monkeypatch):
+    """Regression: an engine constructed without a mesh must resolve the
+    mesh fresh on every evaluation (plane set's mesh, else the host mesh)
+    — never pin the first plane set's mesh and silently reuse it for
+    later stores/joins on different meshes."""
+    from repro.core.costs import CostLedger
+    from repro.data.cnf_fixtures import representative_cnf
+    from repro.data.simulated_llm import SimulatedExtractor
+    from repro.data import synth
+    from repro.distributed.mesh import make_join_mesh
+    from repro.engine import get_engine
+    from repro.engine.sharded import ShardedEngine
+    from repro.serving.planes import FeaturePlaneStore, corpus_fingerprint
+
+    ds = synth.police_records(n_incidents=12, reports_per_incident=2, seed=3)
+    ext = SimulatedExtractor(ds)
+    specs, clauses, thetas = representative_cnf(ds)
+    join_mesh = make_join_mesh(1, 1, 1)        # 3-axis mesh, 1 device
+    store = FeaturePlaneStore(mesh=join_mesh)
+    planes = store.provide(
+        specs, ext, CostLedger(),
+        fp_l=corpus_fingerprint(ds.name, "l", ds.texts_l, ds.fields_l),
+        fp_r=corpus_fingerprint(ds.name, "r", ds.texts_r, ds.fields_r))
+    feats = ext.materialize(specs, CostLedger())
+
+    seen = []
+    real_build = ShardedEngine._build
+
+    def spy(self, mesh, *a, **k):
+        seen.append(mesh)
+        return real_build(self, mesh, *a, **k)
+
+    monkeypatch.setattr(ShardedEngine, "_build", spy)
+    eng = get_engine("sharded", tl=32, tr=32, r_chunk=64)
+    r1 = eng.evaluate(planes, clauses, thetas)  # store's join mesh
+    assert seen and all(m is join_mesh for m in seen)
+    assert eng.mesh is None                     # nothing pinned
+
+    seen.clear()
+    r2 = eng.evaluate(feats, clauses, thetas)   # plain feats: host mesh
+    assert seen and all(m is not join_mesh for m in seen), \
+        "engine kept the first plane set's mesh for a mesh-less corpus"
+    assert all("pod" not in m.axis_names for m in seen)  # host mesh
+    assert r2.candidates == r1.candidates
+
+    # a mesh passed at construction always wins, even over the plane
+    # set's attached mesh
+    host_style = make_join_mesh(1, 1, 1)
+    seen.clear()
+    pinned = get_engine("sharded", mesh=host_style, tl=32, tr=32, r_chunk=64)
+    r3 = pinned.evaluate(planes, clauses, thetas)
+    assert seen and all(m is host_style for m in seen)
+    assert r3.candidates == r1.candidates
+
+
 def test_fdjconfig_pods_threads_into_engine(monkeypatch):
     from repro.core.join import FDJConfig, _get_engine
     import repro.distributed.mesh as mesh_mod

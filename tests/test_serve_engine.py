@@ -88,6 +88,26 @@ def test_eos_truncates_and_wave_exits_early(tiny):
     assert eng.steps_executed < full_eng.steps_executed
 
 
+def test_request_resubmission_does_not_leak_decode_state(tiny):
+    """Regression: a Request run a second time (retry, or reuse across
+    engines) must decode from scratch — stale out_tokens used to satisfy
+    the max_new_tokens/eos checks immediately, so the rerun silently
+    returned the old tokens plus one garbage prefill append."""
+    cfg, params = tiny
+    rng = np.random.default_rng(4)
+    prompt = rng.integers(0, cfg.vocab_size, size=5).astype(np.int32)
+    eng = ServeEngine(cfg, params, batch_slots=1, capacity=48)
+    r = Request(prompt, max_new_tokens=6)
+    eng.run([r])
+    first = list(r.out_tokens)
+    assert len(first) == 6
+    eng.run([r])                                       # resubmit the object
+    assert r.out_tokens == first                       # identical fresh run
+    eng2 = ServeEngine(cfg, params, batch_slots=2, capacity=48)
+    eng2.run([r])                                      # reuse across engines
+    assert r.out_tokens == first
+
+
 def test_mixed_budgets_truncate_per_slot(tiny):
     """A short-budget slot stops at max_new_tokens while the wave keeps
     decoding for its longer-budget peers."""

@@ -111,11 +111,94 @@ def test_sharded_stream_overflow_retry():
     opts = dict(tl=32, tr=32, r_chunk=32, capacity=8)
     eng = get_engine("sharded", **opts)
     chunks = list(eng.evaluate_stream(feats, [[0]], [0.5]))
-    assert eng.capacity >= 4 * 8                 # the >=4x growth rule
+    assert eng.last_sweep_capacity >= 4 * 8      # the >=4x growth rule
+    assert eng.capacity == 8                     # config never mutated
     union = sorted(p for ch in chunks for p in ch.candidates)
     assert union == [(i, j) for i in range(n) for j in range(n)]
     for ch in chunks:                            # no chunk silently truncated
         assert len(ch.candidates) == ch.stats.n_candidates
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_vacuous_conjunction_streams_in_bounded_chunks(engine, monkeypatch):
+    """The empty-clause-list path must emit the cross product in bounded
+    row-block chunks, never one host list of all n_l*n_r pairs (the
+    streaming contract — and RefinementPump memory — on large corpora)."""
+    import repro.engine.base as base_mod
+    monkeypatch.setattr(base_mod, "VACUOUS_CHUNK_PAIRS", 7)
+    n_l, n_r = 5, 3
+    spec = FeaturizationSpec("name", "", "word_overlap", "llm", "name")
+    feats = [vectorize(spec, [f"l{i}" for i in range(n_l)],
+                       [f"r{j}" for j in range(n_r)])]
+    chunks = list(get_engine(engine, **_OPTS[engine]).evaluate_stream(
+        feats, [], []))
+    # 7 // 3 = 2 rows per chunk -> 3 chunks of 6, 6, 3 pairs
+    assert [len(ch.candidates) for ch in chunks] == [6, 6, 3]
+    assert [ch.index for ch in chunks] == [0, 1, 2]
+    union = [p for ch in chunks for p in ch.candidates]
+    assert len(union) == len(set(union))          # disjoint
+    assert sorted(union) == [(i, j) for i in range(n_l) for j in range(n_r)]
+    for ch in chunks:
+        assert ch.candidates == sorted(ch.candidates)
+        assert ch.stats.n_candidates == len(ch.candidates)
+    # batch drain still equals the full cross product (backend parity:
+    # all three engines share this path, and evaluate is a drain)
+    batch = get_engine(engine, **_OPTS[engine]).evaluate(feats, [], [])
+    assert batch.candidates == sorted(union)
+
+
+def _banded_density_fixture():
+    """33 x 128 corpus whose matches all live in R band [64, 96): with
+    r_chunk=32 the sweep is 4 steps and only step 2 overflows — the
+    deterministic retry-mid-pipeline fixture."""
+    n_l, n_r = 33, 128
+    texts_l = ["same text"] * n_l
+    texts_r = ["zzz yyy"] * 64 + ["same text"] * 32 + ["zzz yyy"] * 32
+    spec = FeaturizationSpec("name", "", "word_overlap", "llm", "name")
+    feats = [vectorize(spec, texts_l, texts_r)]
+    want = [(i, j) for i in range(n_l) for j in range(64, 96)]
+    return feats, want
+
+
+@pytest.mark.parametrize("double_buffer", [True, False])
+def test_sharded_retry_mid_pipeline_drops_and_duplicates_nothing(
+        double_buffer):
+    """capacity=1 with matches confined to a mid-sweep band: the overflow
+    retry fires while the next step is already in flight, which must be
+    invalidated and re-dispatched at the grown capacity — every chunk
+    emitted exactly once, none truncated, none duplicated."""
+    feats, want = _banded_density_fixture()
+    eng = get_engine("sharded", tl=32, tr=32, r_chunk=32, capacity=1,
+                     double_buffer=double_buffer)
+    chunks = list(eng.evaluate_stream(feats, [[0]], [0.25]))
+    assert len(chunks) == 4                      # one per R band
+    union = [p for ch in chunks for p in ch.candidates]
+    assert len(union) == len(set(union)), "retry duplicated a chunk"
+    assert sorted(union) == want, "retry dropped or truncated a chunk"
+    for ch in chunks:
+        assert len(ch.candidates) == ch.stats.n_candidates
+    assert eng.last_sweep_capacity >= 33 * 32    # grew to the hot band
+    assert eng.capacity == 1                     # config untouched
+    # parity with the oracle on the same fixture
+    assert sorted(union) == get_engine("numpy").evaluate(
+        feats, [[0]], [0.25]).candidates
+
+
+def test_sharded_overlap_accounting_pipelined_vs_serial():
+    """overlap_s is the degradation signal: > 0 when the double-buffered
+    loop kept a successor step in flight during host pulls, exactly 0 when
+    forced serial (the property benchmarks/run.py gates)."""
+    ds = synth.police_records(n_incidents=37, reports_per_incident=2, seed=5)
+    feats, clauses, thetas = _materialized_cnf(ds)
+    db = get_engine("sharded", **_OPTS["sharded"]).evaluate(
+        feats, clauses, thetas)
+    serial = get_engine("sharded", double_buffer=False,
+                        **_OPTS["sharded"]).evaluate(feats, clauses, thetas)
+    assert db.candidates == serial.candidates
+    assert db.stats.overlap_s > 0
+    assert serial.stats.overlap_s == 0.0
+    for st in (db.stats, serial.stats):          # split is always recorded
+        assert st.dispatch_wall_s > 0 and st.pull_wall_s > 0
 
 
 def test_stream_wall_clock_excludes_consumer_time():
