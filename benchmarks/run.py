@@ -208,6 +208,15 @@ def serving_bench(fast: bool):
     sv.main(fast)
 
 
+def calibration_bench(fast: bool):
+    """Serving-time guarantee calibration: observed recall through a
+    scripted distribution-shifting append stream, with and without online
+    reservoir recalibration — asserts the recalibrated path keeps
+    recall >= T (see DESIGN.md §4a)."""
+    from benchmarks import calibration as cb
+    cb.main(fast)
+
+
 ALL = {
     "table2": table2_guarantees,
     "table3": table3_cost_ratio,
@@ -219,6 +228,7 @@ ALL = {
     "engines": engine_bench,
     "pipeline": pipeline_bench,
     "serving": serving_bench,
+    "calibration": calibration_bench,
 }
 
 
@@ -247,7 +257,13 @@ _GATES = {
     "serving": {
         "key": ("engine", "mode"),
         "metrics": ("wall_s", "extraction_cost", "bytes_to_device",
-                    "bytes_reshard", "pairs", "agrees_with_cold"),
+                    "bytes_reshard", "pairs", "agrees_with_cold",
+                    "recalibrations", "theta_swaps", "reservoir_cost"),
+    },
+    "calibration": {
+        "key": ("dataset", "phase"),
+        "metrics": ("recall", "met_target", "wall_s", "recalibrations",
+                    "theta_swaps", "reservoir_cost"),
     },
 }
 
@@ -271,6 +287,12 @@ def _wall_band():
 
 def _metric_band(field: str):
     """(kind, rel, slack) for banded fields; None = exact match."""
+    if field == "recall":
+        # a floor, like overlap_s but with tolerance: observed recall is
+        # the guarantee itself — a fresh run may beat the baseline freely,
+        # but dropping more than the slack below it means the calibration
+        # path regressed, regardless of how fast or cheap the run got.
+        return ("recall", 0.0, 0.02)
     if field.endswith("overlap_s"):
         # a floor, not a ceiling: overlap seconds measure whether the
         # double-buffered band loop actually kept a step in flight during
@@ -328,6 +350,12 @@ def check_against(baseline_dir: str, regimes, crashed=()) -> list:
                                    f"{b!r} -> {n!r} (must match exactly)")
                     continue
                 kind, rel, slack = band
+                if kind == "recall":
+                    if n is None or float(n) < float(b) - slack:
+                        bad.append(f"{name}{list(key)}.{field}: {b} -> {n} "
+                                   f"(recall floor: may only drop by "
+                                   f"{slack})")
+                    continue
                 if kind == "floor":
                     if float(b) > 0.0 and (n is None or float(n) <= 0.0):
                         bad.append(f"{name}{list(key)}.{field}: {b} -> {n} "

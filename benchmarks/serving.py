@@ -49,6 +49,14 @@ def _row(name, mode, r, agree):
         "plan_hit": r.plan_hit, "delta_rows": r.delta_rows,
         "pairs": len(r.pairs), "recall": round(r.join.recall, 4),
         "agrees_with_cold": agree,
+        # guarantee upkeep (DESIGN.md §4a): the delta query runs one
+        # reservoir check; on this stable append stream the cached theta
+        # must survive it (theta_swaps stays 0 — gated), so the only
+        # upkeep price is the reservoir top-up labels
+        "recalibrations": r.cost.recalibrations,
+        "theta_swaps": r.cost.theta_swaps,
+        "theta_drift": round(r.cost.theta_drift, 4),
+        "reservoir_cost": r.cost.reservoir_cost,
     }
 
 
@@ -92,6 +100,11 @@ def run(fast: bool = True):
         rows.append(drow)
         assert dq.delta_rows == len(delta_rows.texts), \
             f"delta {ename} query re-evaluated the full corpus"
+        assert dq.cost.recalibrations == 1 and dq.cost.theta_swaps == 0, \
+            f"delta {ename}: stable-distribution append must pass the " \
+            f"reservoir invariant check without a theta swap " \
+            f"(got {dq.cost.recalibrations} checks, " \
+            f"{dq.cost.theta_swaps} swaps)"
 
         for row in rows[-3:]:
             print(f"serving,{row['engine']},{row['mode']},"

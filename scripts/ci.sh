@@ -15,10 +15,13 @@
 #   serving:  plane-store cold/warm/delta regime (§4) — runs --strict and
 #             FAILS CI if the warm path reports nonzero extraction charges,
 #             nonzero plane H2D bytes, or nonzero plane reshard bytes
+#   calibration: serving-time guarantee regime (§4a) — scripted
+#             distribution-shifting append; FAILS CI if the recalibrated
+#             path's observed recall drops below the target
 #   gate:     every regime above is compared against the committed
 #             baselines in benchmarks/baseline/ (--check-against): wall
-#             regressions beyond the band, byte/dollar inflations, or lost
-#             coverage exit nonzero
+#             regressions beyond the band, byte/dollar inflations, recall
+#             floors, or lost coverage exit nonzero
 #
 # The slow suite (system joins, ≥50-trial guarantee sweep, the full
 # 512-device multipod dry-run test, per-arch smoke tests) runs separately:
@@ -26,6 +29,11 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+# adj_target failure curves are data-independent and cached on disk
+# (core/adj_target.py cache_dir()): pin the cache to a workspace-relative
+# dir so CI runners can persist it across runs (the workflow restores it
+# via actions/cache) instead of recomputing the Monte-Carlo curves
+export REPRO_ADJ_CACHE="${REPRO_ADJ_CACHE:-$PWD/.cache/adj_target}"
 
 echo "== lint: ruff check (no autofix) =="
 if command -v ruff >/dev/null 2>&1; then
@@ -37,8 +45,9 @@ fi
 echo "== tier-1: fast test subset =="
 python -m pytest -q -m "not slow"
 
-echo "== smoke benchmarks + regression gate (engines incl. multipod dry-run, pipeline, serving) =="
-python -m benchmarks.run --fast --strict --only engines,pipeline,serving \
+echo "== smoke benchmarks + regression gate (engines incl. multipod dry-run, pipeline, serving, calibration) =="
+python -m benchmarks.run --fast --strict \
+    --only engines,pipeline,serving,calibration \
     --check-against benchmarks/baseline
 
 echo "CI OK"

@@ -35,7 +35,21 @@ from typing import Optional
 
 import numpy as np
 
-CACHE_DIR = os.environ.get("REPRO_ADJ_CACHE", "/root/repo/.cache/adj_target")
+
+def cache_dir() -> str:
+    """Resolve the on-disk curve cache directory at call time.
+
+    ``REPRO_ADJ_CACHE`` wins; the default derives the repo root from this
+    file's location (src/repro/core/ -> three parents up) so any checkout
+    — dev container, CI workspace, a colleague's clone — caches inside its
+    own tree instead of scribbling on a hardcoded absolute path.
+    """
+    env = os.environ.get("REPRO_ADJ_CACHE")
+    if env:
+        return env
+    root = os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__)))))
+    return os.path.join(root, ".cache", "adj_target")
 
 
 def _worst_case_maxcap(k_plus: int, r: int, n_plus: int, target: float,
@@ -106,7 +120,7 @@ def failure_curve(k_plus: int, r: int, n_plus: int, target: float,
                   n_trials: int, seed: int = 0, cache: bool = True) -> np.ndarray:
     """P_{T'} for T' = (T + i/k+) — returns P(max count >= m) for m=0..k+."""
     key = _cache_key(k=k_plus, r=r, n=n_plus, t=round(target, 6), N=n_trials, s=seed)
-    path = os.path.join(CACHE_DIR, key + ".npy")
+    path = os.path.join(cache_dir(), key + ".npy")
     if cache and os.path.exists(path):
         return np.load(path)
     caps = _worst_case_maxcap(k_plus, r, n_plus, target, n_trials, seed)
@@ -114,7 +128,7 @@ def failure_curve(k_plus: int, r: int, n_plus: int, target: float,
     counts = np.bincount(caps, minlength=k_plus + 2)[: k_plus + 2]
     tail = counts[::-1].cumsum()[::-1] / n_trials
     if cache:
-        os.makedirs(CACHE_DIR, exist_ok=True)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
         np.save(path, tail)
     return tail
 

@@ -58,6 +58,15 @@ class CostLedger:
     bytes_h2d: int = 0           # host->device plane bytes actually moved
     bytes_reshard: int = 0       # device->device bytes laying planes out on
                                  # the sharded engine's mesh (warm: 0)
+    # online guarantee calibration (DESIGN.md §4a): serving-time reservoir
+    # recalibration of cached plans.  ``reservoir_cost`` dollars are ALSO
+    # counted inside ``labeling`` (they are oracle labels) — this field
+    # exists so the serving benchmark can report what keeping the guarantee
+    # live costs, separately from plan-time sampling.
+    recalibrations: int = 0      # reservoir-refresh + invariant checks run
+    theta_swaps: int = 0         # recalibrations that hot-swapped theta
+    theta_drift: float = 0.0     # summed L-inf theta movement across swaps
+    reservoir_cost: float = 0.0  # labeling dollars spent refreshing reservoirs
 
     def charge_label(self, prompt_tokens: int, output_tokens: int = 1):
         self.labeling += (prompt_tokens * PRICE_JOIN_LLM_IN
@@ -110,6 +119,16 @@ class CostLedger:
         self.bytes_h2d += int(bytes_h2d)
         self.bytes_reshard += int(bytes_reshard)
 
+    def record_recalibration(self, *, swapped: bool, drift: float,
+                             dollars: float) -> None:
+        """One serving-time guarantee recalibration: an invariant check on
+        the refreshed reservoir, plus (when the cached theta failed it) a
+        device re-sweep that hot-swapped the plan's thresholds."""
+        self.recalibrations += 1
+        self.theta_swaps += int(swapped)
+        self.theta_drift += float(drift)
+        self.reservoir_cost += float(dollars)
+
     def absorb(self, other: "CostLedger") -> None:
         """Merge another ledger's charges in (serving: per-query ledgers
         accumulate into the service-lifetime ledger)."""
@@ -127,6 +146,10 @@ class CostLedger:
             evicted_bytes=other.plane_evicted_bytes,
             resident_bytes=other.plane_resident_bytes,
             bytes_h2d=other.bytes_h2d, bytes_reshard=other.bytes_reshard)
+        self.recalibrations += other.recalibrations
+        self.theta_swaps += other.theta_swaps
+        self.theta_drift += other.theta_drift
+        self.reservoir_cost += other.reservoir_cost
 
     def serving_summary(self) -> dict:
         """Plane-store counters for the Fig-9 breakdown / serving benchmark."""
@@ -137,6 +160,10 @@ class CostLedger:
             "plane_resident_bytes": self.plane_resident_bytes,
             "bytes_h2d": self.bytes_h2d,
             "bytes_reshard": self.bytes_reshard,
+            "recalibrations": self.recalibrations,
+            "theta_swaps": self.theta_swaps,
+            "theta_drift": self.theta_drift,
+            "reservoir_cost": self.reservoir_cost,
         }
 
     def wall_summary(self) -> dict:

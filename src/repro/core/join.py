@@ -78,6 +78,13 @@ class FDJConfig:
     stream_refinement: bool = False  # pipeline step ⑨ over step ②'s stream
     refine_batch_pairs: int = 512  # oracle batch size inside the pump
     pump_queue_chunks: int = 4     # bounded chunk queue (engine backpressure)
+    recalibrate: bool = True       # serving: keep cached plans' theta
+    #   calibrated online — after appends shift plane distributions, the
+    #   JoinService refreshes a labeled reservoir, re-runs adj_target +
+    #   the device threshold sweep, and hot-swaps theta when the cached
+    #   value no longer meets the refreshed target (DESIGN.md §4a);
+    #   execution-only, never part of a serving plan key
+    reservoir_cap: int = 4096      # max labeled reservoir pairs per plan
     seed: int = 0
 
 
@@ -96,6 +103,13 @@ class JoinPlan:
     theta: np.ndarray              # per-clause thresholds (Eq 4)
     t_prime: float                 # adjusted recall target (step ⑤)
     feasible: bool                 # Eq-4 feasibility on S'
+    # the labeled threshold sample S' itself, retained so the serving layer
+    # can seed a per-plan calibration reservoir (join_service recalibration:
+    # after appends shift plane distributions, adj_target + the device sweep
+    # re-run on the reservoir and hot-swap ``theta``).  Labels were already
+    # charged by step ④ — carrying them is free.
+    calib_pairs: Optional[list] = None
+    calib_labels: Optional[np.ndarray] = None
 
     @property
     def degenerate(self) -> bool:
@@ -187,7 +201,10 @@ def plan_join(dataset, oracle, proposer, extractor, cfg: FDJConfig, *,
         t_prime = adj.t_prime
         d2 = extractor.pair_distances(used_specs, s2, ledger)
         cd2 = sc_local.clause_distances(d2)
-        thr = min_fpr_thresholds(cd2, y2, t_prime)
+        # Eq-4 selection goes through the device sweep (threshold_sweep
+        # kernel grid + coordinate refinement; greedy remains the numpy
+        # fallback and the never-worse A/B baseline)
+        thr = min_fpr_thresholds(cd2, y2, t_prime, method="auto")
         theta = thr.theta
         feasible = thr.feasible
     else:
@@ -197,7 +214,8 @@ def plan_join(dataset, oracle, proposer, extractor, cfg: FDJConfig, *,
 
     return JoinPlan(specs=specs, scaffold=sc, used_specs=used_specs,
                     sc_local=sc_local, theta=theta, t_prime=t_prime,
-                    feasible=feasible)
+                    feasible=feasible, calib_pairs=list(s2),
+                    calib_labels=np.asarray(y2, bool))
 
 
 def execute_join(dataset, oracle, extractor, cfg: FDJConfig, plan: JoinPlan,
@@ -259,15 +277,36 @@ def execute_join(dataset, oracle, extractor, cfg: FDJConfig, plan: JoinPlan,
         pr = pump.run(chunk_iter, ledger=ledger)
         out_pairs = pr.pairs
         cand_arr = pr.candidates
+        n_cands = len(cand_arr)
         engine_stats = pr.engine_stats
+    elif plan.degenerate and cfg.precision_target >= 1.0:
+        # refine-everything fallback, labeled in bounded row blocks: the
+        # barrier path used to materialize the full n_l*n_r cross product
+        # as one host list (PR 5 fixed only the streaming path).  Per-pair
+        # oracle refinement needs no global view, so label block by block.
+        from repro.engine.base import iter_cross_product_chunks
+        out_pairs = set()
+        n_cands = 0
+        cand_arr = [] if keep_candidates else None
+        t0 = time.perf_counter()
+        for block in iter_cross_product_chunks(n_l, n_r):
+            labs = label(block, "refinement")
+            out_pairs |= {p for p, l in zip(block, labs) if l}
+            n_cands += len(block)
+            if cand_arr is not None:
+                cand_arr.extend(block)
+        ledger.record_walls(0.0, time.perf_counter() - t0, 0.0)
     else:
         if plan.degenerate:
+            # Appx-C (T_P < 1) needs whole-candidate-set quantiles: the
+            # full list is materialized for the precision ladder only
             candidates = [(i, j) for i in range(n_l) for j in range(n_r)]
         else:
             candidates, engine_stats = _evaluate_cnf(feats, plan.sc_local,
                                                      plan.theta, cfg)
         out_pairs = set()
         cand_arr = list(candidates)
+        n_cands = len(cand_arr)
         t0 = time.perf_counter()
         if cfg.precision_target >= 1.0:
             labs = label(cand_arr, "refinement")
@@ -286,11 +325,12 @@ def execute_join(dataset, oracle, extractor, cfg: FDJConfig, plan: JoinPlan,
         pairs=out_pairs, recall=recall, precision=precision, cost=ledger,
         scaffold=plan.scaffold, specs=plan.specs, theta=plan.theta,
         t_prime=plan.t_prime,
-        candidate_count=len(cand_arr),
+        candidate_count=n_cands,
         met_target=(recall >= cfg.recall_target - 1e-12
                     and precision >= cfg.precision_target - 1e-12),
         engine_stats=engine_stats,
-        candidates=sorted(cand_arr) if keep_candidates else None,
+        candidates=sorted(cand_arr) if keep_candidates and cand_arr is not None
+        else None,
     )
 
 

@@ -8,10 +8,26 @@ over per-clause distances with one threshold each.
 
 ``min_fpr_thresholds`` solves  min FPR  s.t. observed recall >= target:
 exhaustive for 1 clause (Appx G pruning makes this O(k log k)); for more
-clauses the Alg-8 greedy coordinate descent from +inf, with swap-repair local
-search.  Candidate thresholds are exactly the positive pairs' distances —
-pushing a threshold below the largest retained positive only drops negatives,
-so optima sit on positive distances.
+clauses, ``method`` selects between two routes:
+
+  * ``"greedy"`` — the Alg-8 greedy coordinate descent from +inf, with
+    swap-repair local search (the numpy fallback, and the cheap route
+    Alg-4 scaffold *cost estimation* stays on: it only needs relative
+    ordering across candidate scaffolds, not the tightest theta);
+  * ``"device"`` — the ``kernels/threshold_sweep`` path: a capped
+    cartesian grid of per-clause positive-distance quantiles
+    (``candidate_grid``) is swept in one ``pallas_call`` (all (pos, sel)
+    counts at once), the argmin-FPR grid point subject to recall >= target
+    seeds a greedy coordinate refinement, and the result is A/B'd against
+    the plain greedy descent — the device route never returns a worse
+    feasible FPR than the greedy baseline, by construction;
+  * ``"auto"`` — ``"device"`` when the sweep kernel's stack imports,
+    else ``"greedy"`` (the guarantee path — Eq-4 selection in plan_join
+    and serving-time recalibration — passes this).
+
+Candidate thresholds are exactly the positive pairs' distances — pushing a
+threshold below the largest retained positive only drops negatives, so
+optima sit on positive distances.
 """
 
 from __future__ import annotations
@@ -61,8 +77,15 @@ def _eval(cd: np.ndarray, labels: np.ndarray, theta: np.ndarray):
 
 
 def min_fpr_thresholds(cd: np.ndarray, labels: np.ndarray, target: float,
-                       exhaustive_max_clauses: int = 1) -> ThresholdResult:
-    """cd: (k, C) clause distances; labels: (k,) bool. Solves Eq 1 / Eq 4."""
+                       method: str = "greedy") -> ThresholdResult:
+    """cd: (k, C) clause distances; labels: (k,) bool. Solves Eq 1 / Eq 4.
+
+    ``method``: "greedy" | "device" | "auto" (see module docstring).  The
+    device sweep is strictly-no-worse: its result is the best feasible of
+    (refined sweep winner, greedy baseline).
+    """
+    if method not in ("greedy", "device", "auto"):
+        raise ValueError(f"unknown threshold method {method!r}")
     k, c = cd.shape
     labels = labels.astype(bool)
     n_pos = int(labels.sum())
@@ -75,20 +98,70 @@ def min_fpr_thresholds(cd: np.ndarray, labels: np.ndarray, target: float,
     pos = cd[labels]                                # (k+, C)
     need = int(math.ceil(target * n_pos - 1e-9))    # min retained positives
 
-    if c == 1:
+    if c == 1 and method != "device":
         return _sweep_1d(cd[:, 0], labels, need, n_pos)
 
     # --- greedy coordinate descent from +inf (Alg 8 style) -----------------
-    theta = pos.max(axis=0).astype(np.float64)      # recall = 1
-    best = _greedy(cd, labels, theta, need, n_pos)
-    # swap-repair passes: raise one dim to its max, re-descend
-    for j in range(c):
-        t2 = best.theta.copy()
-        t2[j] = pos[:, j].max()
-        cand = _greedy(cd, labels, t2, need, n_pos)
-        if cand.feasible and cand.fpr < best.fpr - 1e-12:
-            best = cand
+    if c == 1:
+        best = _sweep_1d(cd[:, 0], labels, need, n_pos)
+    else:
+        theta = pos.max(axis=0).astype(np.float64)  # recall = 1
+        best = _greedy(cd, labels, theta, need, n_pos)
+        # swap-repair passes: raise one dim to its max, re-descend
+        for j in range(c):
+            t2 = best.theta.copy()
+            t2[j] = pos[:, j].max()
+            cand = _greedy(cd, labels, t2, need, n_pos)
+            if cand.feasible and cand.fpr < best.fpr - 1e-12:
+                best = cand
+    if method == "greedy":
+        return best
+    dev = _device_sweep(cd, labels, pos, need, n_pos,
+                        required=(method == "device"))
+    if dev is None:                                 # auto: kernel unavailable
+        return best
+    if dev.feasible and (not best.feasible or dev.fpr < best.fpr - 1e-12):
+        return dev
     return best
+
+
+def _device_sweep(cd: np.ndarray, labels: np.ndarray, pos: np.ndarray,
+                  need: int, n_pos: int, *, required: bool):
+    """Grid sweep on device (kernels/threshold_sweep) + coordinate
+    refinement around the argmin-FPR feasible grid point.
+
+    Returns None when the sweep stack cannot import and the caller asked
+    for "auto" (the numpy greedy remains the fallback); ``required=True``
+    re-raises instead — "device" was requested explicitly.
+    """
+    try:
+        from repro.kernels.threshold_sweep.ops import (candidate_grid,
+                                                       sweep_counts)
+    except Exception:
+        if required:
+            raise
+        return None
+    grid = candidate_grid(pos)
+    pos_counts, sel_counts = sweep_counts(cd, labels, grid)
+    k = cd.shape[0]
+    n_neg = max(k - n_pos, 1)
+    feas = pos_counts >= need - 0.5                 # counts are exact f32 ints
+    if not feas.any():
+        # grid always contains the per-dim positive max (recall-1 corner),
+        # so this only happens when even recall 1 cannot reach ``need``
+        v = pos.max(axis=0).astype(np.float64)
+        recall, fpr, _ = _eval(cd, labels, v)
+        return ThresholdResult(v, fpr, recall, False)
+    fprs = np.where(feas, (sel_counts - pos_counts) / n_neg, np.inf)
+    theta0 = grid[int(np.argmin(fprs))].astype(np.float64)
+    # coordinate refinement: the winner seeds the same descent the greedy
+    # route uses, landing on exact positive-distance optima the quantile
+    # grid straddles
+    if cd.shape[1] == 1:
+        refined = _sweep_1d(cd[:, 0], labels, need, n_pos)
+    else:
+        refined = _greedy(cd, labels, theta0, need, n_pos)
+    return refined
 
 
 def _sweep_1d(d: np.ndarray, labels: np.ndarray, need: int, n_pos: int) -> ThresholdResult:
@@ -190,7 +263,6 @@ def get_logical_scaffold(dstack: np.ndarray, labels: np.ndarray, target: float,
         max_clauses = max(int(math.floor(1.0 / max(1.0 - target, 1e-9))), 1)
     sc = Scaffold(clauses=[])
     # cost of the empty scaffold: every negative admitted (FPR = 1)
-    n_pos = max(int(labels.sum()), 1)
     cur_cost = 1.0
     remaining = list(range(f))
 

@@ -415,7 +415,6 @@ def _reaction_pool(n: int) -> list:
 
 def biodex(n_notes: int = 300, n_terms: int = 140, seed: int = 0) -> JoinDataset:
     """BioDEX analogue (category 3): weakly decomposable classification."""
-    rng = _rng(seed, "biodex", n_notes)
     terms = _reaction_pool(n_terms)
     texts_l, f_sym = [], []
     truth = set()

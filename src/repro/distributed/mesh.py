@@ -79,7 +79,6 @@ class AxisEnv:
     def from_mesh(mesh: Mesh) -> "AxisEnv":
         names = set(mesh.axis_names)
         has_pod = "pod" in names
-        has_model = "model" in names and mesh.shape.get("model", 1) > 1
         data = ("data",) if "data" in names else ()
         pod = ("pod",) if has_pod else ()
         model = ("model",) if "model" in names else ()

@@ -4,13 +4,20 @@ Evaluates G candidate threshold vectors against k labeled sample rows of
 clause distances in one pass — the inner loop of Eq 1 / Eq 4 (scaffold cost
 estimation and final threshold selection).  For each grid row g:
 
-    pos[g] = sum_i labels_i * AND_c (cd[i,c] <= theta[g,c])
-    sel[g] = sum_i           AND_c (cd[i,c] <= theta[g,c])
+    pos[g] = sum_i valid_i * labels_i * AND_c (cd[i,c] <= theta[g,c])
+    sel[g] = sum_i valid_i *            AND_c (cd[i,c] <= theta[g,c])
 
 The (TG x TK) pass/fail plane is built on the VPU from C unrolled broadcast
 compares; the label reduction is a (TG,TK)@(TK,) matvec on the MXU.  Output
 accumulates across the k grid dimension (out block revisited; initialized at
 program_id(1)==0).
+
+``valid`` masks padded sample rows *explicitly*.  The historical scheme
+padded cd rows with +inf and relied on ``inf <= theta`` being false — but
+``inf <= inf`` is true, so any non-finite threshold column (which
+``min_fpr_thresholds`` emits when a sample has no positives) or +inf
+distance row inflated ``sel`` by the pad count.  Pad rows now carry
+valid = 0 and count nothing under *any* threshold, finite or not.
 
 Output layout: (G, 128) f32, col 0 = positive count, col 1 = selected count
 (lane-padded for TPU tiling).
@@ -25,7 +32,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _sweep_kernel(cd_ref, lab_ref, th_ref, out_ref, *, n_clauses, tg, tk):
+def _sweep_kernel(cd_ref, lab_ref, valid_ref, th_ref, out_ref, *,
+                  n_clauses, tg, tk):
     @pl.when(pl.program_id(1) == 0)
     def _init():
         out_ref[:, :] = jnp.zeros_like(out_ref)
@@ -36,7 +44,9 @@ def _sweep_kernel(cd_ref, lab_ref, th_ref, out_ref, *, n_clauses, tg, tk):
         t = th_ref[:, c]                             # (TG,)
         pas = d[None, :] <= t[:, None]               # (TG, TK)
         ok = pas if ok is None else jnp.logical_and(ok, pas)
-    okf = ok.astype(jnp.float32)
+    # explicit pad-row mask: a padded sample row contributes to neither
+    # count, regardless of the threshold values (inf <= inf is true!)
+    okf = ok.astype(jnp.float32) * valid_ref[:][None, :]
     lab = lab_ref[:]                                 # (TK,)
     pos = jax.lax.dot_general(okf, lab[:, None], (((1,), (0,)), ((), ())),
                               preferred_element_type=jnp.float32)[:, 0]
@@ -47,12 +57,14 @@ def _sweep_kernel(cd_ref, lab_ref, th_ref, out_ref, *, n_clauses, tg, tk):
     out_ref[:, :] = acc
 
 
-def threshold_sweep(cd, labels, thetas, *, tg: int = 256, tk: int = 512,
+def threshold_sweep(cd, labels, valid, thetas, *, tg: int = 256, tk: int = 512,
                     interpret: bool = False):
-    """cd: (k, C) f32; labels: (k,) f32 in {0,1}; thetas: (G, C) f32.
+    """cd: (k, C) f32; labels: (k,) f32 in {0,1}; valid: (k,) f32 in {0,1}
+    (0 marks padded rows); thetas: (G, C) f32.
 
-    k and G must be tile multiples (pad labels with 0 and cd rows with +inf;
-    pad thetas rows with -inf so padded rows count nothing).
+    k and G must be tile multiples (pad labels/valid with 0; cd pad values
+    are arbitrary — the valid mask, not the compare, excludes them; pad
+    thetas rows with -inf so padded grid rows select nothing real).
     Returns (G, 128) f32; [:, 0] = positives, [:, 1] = selected.
     """
     k, c = cd.shape
@@ -65,9 +77,10 @@ def threshold_sweep(cd, labels, thetas, *, tg: int = 256, tk: int = 512,
         in_specs=[
             pl.BlockSpec((tk, c), lambda i, j: (j, 0)),
             pl.BlockSpec((tk,), lambda i, j: (j,)),
+            pl.BlockSpec((tk,), lambda i, j: (j,)),
             pl.BlockSpec((tg, c), lambda i, j: (i, 0)),
         ],
         out_specs=pl.BlockSpec((tg, 128), lambda i, j: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((g, 128), jnp.float32),
         interpret=interpret,
-    )(cd, labels, thetas)
+    )(cd, labels, valid, thetas)

@@ -7,6 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.threshold_sweep.kernel import threshold_sweep
+from repro.kernels.threshold_sweep.ref import threshold_sweep_ref_jit
 
 
 def _pad_rows(x, n, value):
@@ -19,31 +20,79 @@ def _pad_rows(x, n, value):
 
 def sweep(cd: np.ndarray, labels: np.ndarray, thetas: np.ndarray, *,
           tg: int = 256, tk: int = 512, interpret=None):
-    """Padded, jit'd sweep. Returns (pos_counts, sel_counts) as (G,) arrays."""
+    """Padded, jit'd sweep. Returns (pos_counts, sel_counts) as (G,) arrays.
+
+    Pad rows are excluded by an explicit validity mask (labels and valid
+    padded with 0), NOT by sentinel distances: the historical +inf cd pad
+    leaked into ``sel`` whenever a threshold column was +inf (``inf <= inf``
+    is true) — which ``min_fpr_thresholds`` emits for positive-free samples
+    and all-missing features induce.  The cd pad value is immaterial now
+    (0 keeps the compare well-defined for -inf thresholds too).
+    """
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     k, c = cd.shape
     g = thetas.shape[0]
     kp = -(-k // tk) * tk
     gp = -(-g // tg) * tg
-    cd_p = _pad_rows(cd.astype(np.float32), kp, np.inf)
+    cd_p = _pad_rows(cd.astype(np.float32), kp, 0.0)
     lab_p = _pad_rows(labels.astype(np.float32), kp, 0.0)
+    valid_p = _pad_rows(np.ones(k, np.float32), kp, 0.0)
     th_p = _pad_rows(thetas.astype(np.float32), gp, -np.inf)
     out = threshold_sweep(jnp.asarray(cd_p), jnp.asarray(lab_p),
-                          jnp.asarray(th_p), tg=tg, tk=tk, interpret=interpret)
+                          jnp.asarray(valid_p), jnp.asarray(th_p),
+                          tg=tg, tk=tk, interpret=interpret)
     out = np.asarray(out)[:g]
     return out[:, 0], out[:, 1]
 
 
-def candidate_grid(cd_pos: np.ndarray, max_per_dim: int = 24) -> np.ndarray:
-    """Cartesian grid of per-clause positive-distance quantiles."""
+def sweep_counts(cd: np.ndarray, labels: np.ndarray,
+                 thetas: np.ndarray) -> tuple:
+    """(pos_counts, sel_counts) for the guarantee path (Eq 4 / serving
+    recalibration): the pallas kernel on an accelerator backend, the jitted
+    jnp oracle on CPU — identical math (tests/test_kernels.py holds them
+    bit-for-bit equal), but interpret-mode pallas is ~20x slower than XLA
+    on host, and threshold selection sits on the serving critical path.
+    """
+    if thetas.shape[0] == 0:
+        return np.zeros(0, np.float32), np.zeros(0, np.float32)
+    if jax.default_backend() == "cpu":
+        out = np.asarray(threshold_sweep_ref_jit(
+            jnp.asarray(cd, jnp.float32),
+            jnp.asarray(labels, jnp.float32),
+            jnp.asarray(thetas, jnp.float32)))
+        return out[:, 0], out[:, 1]
+    return sweep(cd, labels, thetas)
+
+
+def candidate_grid(cd_pos: np.ndarray, max_per_dim: int = 24,
+                   max_grid: int = 4096) -> np.ndarray:
+    """Cartesian grid of per-clause positive-distance quantiles.
+
+    ``max_grid`` caps the total grid size: the naive cartesian product is
+    ``max_per_dim ** C`` — an unguarded 24^C blowup for wide scaffolds —
+    so per-dim quantile counts are shrunk (largest dim first) until the
+    product fits.  Every dim always keeps its max positive distance (the
+    recall-1 corner), so the grid is never infeasible when the sample has
+    positives; at least 2 values per dim are kept whenever available.
+    """
     c = cd_pos.shape[1]
+    if c == 0:
+        return np.zeros((1, 0), np.float32)
+    uniq = [np.unique(cd_pos[:, j]) for j in range(c)]
+    counts = [min(len(u), max_per_dim) for u in uniq]
+    # shrink the largest dim until the cartesian product fits the cap
+    while int(np.prod(counts)) > max_grid and max(counts) > 2:
+        counts[int(np.argmax(counts))] -= 1
     axes = []
-    for j in range(c):
-        vals = np.unique(cd_pos[:, j])
-        if len(vals) > max_per_dim:
-            qs = np.linspace(0, 1, max_per_dim)
-            vals = np.unique(np.quantile(vals, qs, method="nearest"))
+    for j, u in enumerate(uniq):
+        if len(u) > counts[j]:
+            qs = np.linspace(0, 1, counts[j])
+            vals = np.unique(np.quantile(u, qs, method="nearest"))
+        else:
+            vals = u
+        if len(vals) == 0 or vals[-1] != u[-1]:
+            vals = np.append(vals, u[-1])   # keep the recall-1 corner
         axes.append(vals)
     mesh = np.meshgrid(*axes, indexing="ij")
     return np.stack([m.ravel() for m in mesh], axis=1).astype(np.float32)

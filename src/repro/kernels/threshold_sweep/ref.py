@@ -2,12 +2,28 @@
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 
-def threshold_sweep_ref(cd, labels, thetas):
-    """cd: (k, C); labels: (k,); thetas: (G, C) -> (G, 2) [pos, sel]."""
+def threshold_sweep_ref(cd, labels, thetas, valid=None):
+    """cd: (k, C); labels: (k,); thetas: (G, C) -> (G, 2) [pos, sel].
+
+    ``valid`` (k,) optionally masks rows out of both counts — the explicit
+    pad-row mask the kernel uses.  Padded rows must be excluded by mask,
+    never by sentinel distances: ``inf <= inf`` is true, so a +inf pad row
+    still passes a non-finite threshold column.
+    """
     ok = jnp.all(cd[None, :, :] <= thetas[:, None, :], axis=-1)  # (G, k)
-    pos = ok.astype(jnp.float32) @ labels.astype(jnp.float32)
-    sel = jnp.sum(ok, axis=1).astype(jnp.float32)
+    okf = ok.astype(jnp.float32)
+    if valid is not None:
+        okf = okf * jnp.asarray(valid, jnp.float32)[None, :]
+    pos = okf @ labels.astype(jnp.float32)
+    sel = jnp.sum(okf, axis=1)
     return jnp.stack([pos, sel], axis=1)
+
+
+# jit once: the serving-time calibration path calls this on every CPU-backend
+# recalibration (ops.sweep_counts dispatches here when no accelerator is
+# attached — interpret-mode pallas would be ~20x slower for identical math)
+threshold_sweep_ref_jit = jax.jit(threshold_sweep_ref)

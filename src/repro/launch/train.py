@@ -21,7 +21,7 @@ from repro.checkpoint import checkpoint as ckpt
 from repro.common.config import TrainConfig
 from repro.configs import get_config, get_smoke
 from repro.data.pipeline import PackedLMConfig, PackedLMDataset, PrefetchLoader
-from repro.distributed.mesh import AxisEnv, make_host_mesh, make_production_mesh
+from repro.distributed.mesh import make_host_mesh, make_production_mesh
 from repro.models import steps, transformer
 from repro.optim import adamw
 
@@ -43,7 +43,6 @@ def train(arch: str, *, smoke: bool = True, steps_n: int = 50, batch: int = 8,
     cfg = get_smoke(arch) if smoke else get_config(arch)
     mesh = (make_host_mesh() if mesh_kind == "host"
             else make_production_mesh(multi_pod=(mesh_kind == "multi")))
-    env = AxisEnv.from_mesh(mesh)
     tcfg = TrainConfig(total_steps=steps_n, warmup_steps=max(steps_n // 10, 1),
                        checkpoint_dir=ckpt_dir, checkpoint_every=ckpt_every,
                        grad_compression=grad_compression)
@@ -64,20 +63,21 @@ def train(arch: str, *, smoke: bool = True, steps_n: int = 50, batch: int = 8,
     train_step = jax.jit(steps.make_train_step(cfg, tcfg))
     metrics = {}
     t0 = time.time()
-    for step in range(start, steps_n):
-        if step == fail_at:
-            raise SimulatedFailure(f"injected failure at step {step}")
-        b = loader.next()
-        batch_dev = {k: jnp.asarray(v) for k, v in b.items()}
-        params, opt, metrics = train_step(params, opt, batch_dev)
-        if (step + 1) % ckpt_every == 0 or step + 1 == steps_n:
-            ckpt.save(ckpt_dir, step + 1, (params, opt))
-        if (step + 1) % log_every == 0:
-            print(f"[train] step {step+1}/{steps_n} "
-                  f"loss={float(metrics['loss']):.4f} "
-                  f"lr={float(metrics['lr']):.2e} "
-                  f"({(time.time()-t0)/max(step+1-start,1):.2f}s/step, "
-                  f"backup_batches={loader.backup_batches})")
+    with mesh:
+        for step in range(start, steps_n):
+            if step == fail_at:
+                raise SimulatedFailure(f"injected failure at step {step}")
+            b = loader.next()
+            batch_dev = {k: jnp.asarray(v) for k, v in b.items()}
+            params, opt, metrics = train_step(params, opt, batch_dev)
+            if (step + 1) % ckpt_every == 0 or step + 1 == steps_n:
+                ckpt.save(ckpt_dir, step + 1, (params, opt))
+            if (step + 1) % log_every == 0:
+                print(f"[train] step {step+1}/{steps_n} "
+                      f"loss={float(metrics['loss']):.4f} "
+                      f"lr={float(metrics['lr']):.2e} "
+                      f"({(time.time()-t0)/max(step+1-start,1):.2f}s/step, "
+                      f"backup_batches={loader.backup_batches})")
     loader.close()
     return {"loss": float(metrics.get("loss", float("nan"))), "steps": steps_n,
             "params": transformer.count_params(cfg)}

@@ -153,7 +153,6 @@ def moe_ffn_ep(params, x, cfg: ModelConfig, axis_name: str = "model",
     """
     mo = cfg.moe
     ways = jax.lax.axis_size(axis_name)
-    my_shard = jax.lax.axis_index(axis_name)
     e_loc = params["w_gate"].shape[0]          # local expert count
     b, s, d = x.shape
     x_flat = x.reshape(-1, d)
@@ -216,7 +215,6 @@ def moe_block_sharded(params, x, cfg: ModelConfig, mesh, env,
     """
     from jax.sharding import PartitionSpec as P
 
-    mo = cfg.moe
     model_ways = mesh.shape.get("model", 1)
     b, s, d = x.shape
     sp_ok = s % model_ways == 0 and s >= model_ways and s > 1
@@ -237,8 +235,6 @@ def moe_block_sharded(params, x, cfg: ModelConfig, mesh, env,
             "w_up": P(_axspec(env.fsdp), None),
             "w_down": P(None, _axspec(env.fsdp)),
         }
-
-    all_axes = tuple(mesh.axis_names)
 
     def body(params_l, x_l):
         # re-gather FSDP-sharded weight dims in compute dtype

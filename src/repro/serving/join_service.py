@@ -34,21 +34,42 @@ DESIGN.md §4): the recall guarantee transfers under the usual sampling
 assumption that appended rows are drawn from the same distribution the
 plan was calibrated on.  ``query(refresh_plan=True)`` re-plans against
 the current corpus when that assumption is in doubt.
+
+**Online recalibration (DESIGN.md §4a).**  Carrying theta forward makes
+the recall guarantee a *plan-time* statement; appends that shift the
+plane distributions (new rows wordier, rescaled scalars) silently void
+it.  The service therefore keeps a labeled *reservoir* per cached plan —
+seeded for free from the plan's own threshold sample S′ — and, on the
+first query after the corpus grew, tops it up with delta-region pairs
+(labeled; the only new dollars), re-runs ``adj_target`` at the grown
+pair count, and checks the cached theta against the refreshed target
+T′.  Reservoir distances come free from the resident planes.  If the
+cached theta still meets T′ the check is all that happens — the delta
+path and its eval cache survive untouched, so stable distributions keep
+the cheap incremental join.  If it fails, the device threshold sweep
+re-solves Eq 4 on the reservoir, theta is hot-swapped in the cached
+plan, and the (now-stale) cached evaluation is dropped.  Counters
+(``recalibrations``, ``theta_swaps``, ``theta_drift``,
+``reservoir_cost``) land in the ``CostLedger``; gate ``recalibrate``
+off in ``FDJConfig`` for the historical carry-forward behavior.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from typing import Callable, Optional
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.adj_target import adj_target
 from repro.core.costs import CostLedger
-from repro.core.featurize import vectorize
+from repro.core.featurize import distance_stack, vectorize
 from repro.core.join import (FDJConfig, JoinPlan, JoinResult, _get_engine,
                              execute_join, make_label_fn, plan_join)
+from repro.core.scaffold import min_fpr_thresholds
 from repro.core.refine import RefinementPump
 from repro.serving.planes import (FeaturePlaneStore,
                                   corpus_fingerprint)
@@ -85,6 +106,30 @@ def hold_out_right(ds, n_delta: int):
     return base, delta
 
 
+def perturb_rows(rows: DeltaRows, *, n_tokens: int = 4,
+                 seed: int = 0) -> DeltaRows:
+    """Distribution-shifted copy of ``rows``: deterministic junk tokens are
+    appended to every non-empty string field value (and record text).  The
+    ground-truth pairs are untouched, but token-overlap and n-gram embed
+    similarities between the appended rows and their true L matches drop,
+    inflating clause distances — exactly the recall-threatening shift the
+    delta-join contract assumes away.  The recalibration tests and the
+    calibration benchmark replay this as their scripted append stream."""
+    rng = np.random.default_rng(seed)
+
+    def junk() -> str:
+        return " ".join(
+            "zq" + "".join(chr(97 + int(rng.integers(26))) for _ in range(6))
+            for _ in range(n_tokens))
+
+    fields = {}
+    for k, vals in rows.fields.items():
+        fields[k] = [v + " " + junk() if isinstance(v, str) and v else v
+                     for v in vals]
+    texts = [t + " " + junk() for t in rows.texts]
+    return DeltaRows(texts=texts, fields=fields, truth=set(rows.truth))
+
+
 @dataclasses.dataclass
 class ServeResult:
     join: JoinResult               # pairs / recall / precision / ledger / stats
@@ -111,6 +156,20 @@ class _EvalCache:
                                    # eval time (None for embed kinds) — the
                                    # delta path is only exact while these
                                    # hold, so a shift forces re-evaluation
+
+
+@dataclasses.dataclass
+class _Reservoir:
+    """Labeled calibration reservoir for one cached plan: a uniform pair
+    sample over the L×R region it currently covers (``n_r`` marks the R
+    extent), kept representative across appends by proportional top-up —
+    and proportional down-sampling of the old region once ``reservoir_cap``
+    binds.  Seeded for free from the plan's threshold sample S′; only the
+    delta-region top-ups pay new oracle labels (``dollars``)."""
+    pairs: list                    # global (i, j) pairs
+    labels: np.ndarray             # (len(pairs),) bool oracle labels
+    n_r: int                       # R extent the sample uniformly covers
+    dollars: float = 0.0           # cumulative top-up labeling spend
 
 
 def _plane_scales(planes) -> tuple:
@@ -150,6 +209,7 @@ class JoinService:
                                         dataset.fields_r)
         self._plans: dict = {}     # plan key -> JoinPlan
         self._evals: dict = {}     # plan key -> _EvalCache
+        self._reservoirs: dict = {}  # plan key -> _Reservoir (calibration)
         self.ledger = CostLedger() # service-lifetime accumulation
         self.queries = 0
         self.appends = 0
@@ -210,6 +270,13 @@ class JoinService:
                              cfg, ledger=qledger, label=label)
             self._plans[key] = plan
             self._evals.pop(key, None)      # plan rebuilt: stale evaluation
+            if plan.calib_pairs is not None:
+                # seed the calibration reservoir from the plan's own labeled
+                # threshold sample — step ④ already paid for these labels
+                self._reservoirs[key] = _Reservoir(
+                    pairs=list(plan.calib_pairs),
+                    labels=np.asarray(plan.calib_labels, bool).copy(),
+                    n_r=self.dataset.n_r)
 
         # capture the plane set execute/delta consumed: the eval cache must
         # remember the scalar normalizations its candidates were computed
@@ -224,6 +291,16 @@ class JoinService:
             if "planes" not in captured:
                 captured["planes"] = raw_provider(specs, led)
             return captured["planes"]
+
+        # online guarantee recalibration (DESIGN.md §4a): before the plan is
+        # replayed over a grown corpus, check its theta against a refreshed
+        # reservoir + adjusted target, hot-swapping when the invariant broke.
+        # Must run before the delta path — a swap invalidates the cached
+        # evaluation (its candidates were produced under the old theta).
+        res = self._reservoirs.get(key)
+        if (cfg.recalibrate and plan_hit and not plan.degenerate
+                and res is not None and res.n_r < self.dataset.n_r):
+            self._recalibrate(cfg, key, plan, res, label, provider, qledger)
 
         cached = self._evals.get(key)
         n_r = self.dataset.n_r
@@ -265,6 +342,94 @@ class JoinService:
         return ServeResult(join=jr, plan_hit=plan_hit, delta_rows=delta_rows,
                            store=diff, wall_s=time.perf_counter() - t0)
 
+    def _recalibrate(self, cfg: FDJConfig, key: tuple, plan: JoinPlan,
+                     res: _Reservoir, label, provider,
+                     qledger: CostLedger) -> None:
+        """Refresh the plan's calibration reservoir to the grown corpus and
+        re-establish the recall invariant (DESIGN.md §4a).
+
+        1. Top up the reservoir with uniform delta-region pairs, sized
+           proportionally to the appended area so the sample stays uniform
+           over the grown L×R (down-sampling the old region once
+           ``reservoir_cap`` binds).  Labels are the only new dollars.
+        2. Re-run ``adj_target`` at the grown pair count -> refreshed T′.
+        3. Check the cached theta's recall on the reservoir (distances are
+           free — they come from the already-resident planes, under the
+           *current* normalization, so scalar rescales are seen too).
+        4. Only if the invariant broke: re-solve Eq 4 via the device sweep,
+           hot-swap theta/T′ in the cached plan, and drop the cached
+           evaluation (its candidates predate the swap).
+        """
+        n_l, n_r = self.dataset.n_l, self.dataset.n_r
+        off = res.n_r
+        rng = np.random.default_rng([abs(cfg.seed), off, n_r])
+        old_area = n_l * off
+        delta_area = n_l * (n_r - off)
+        # --- 1. proportional top-up ---------------------------------------
+        n_new = int(math.ceil(len(res.pairs) * delta_area / max(old_area, 1)))
+        cap = max(int(cfg.reservoir_cap), 1)
+        if len(res.pairs) + n_new > cap:
+            frac_old = old_area / max(old_area + delta_area, 1)
+            n_keep = min(max(int(round(cap * frac_old)), 1), len(res.pairs))
+            n_new = max(cap - n_keep, 0)
+            keep = np.sort(rng.choice(len(res.pairs), size=n_keep,
+                                      replace=False))
+            res.pairs = [res.pairs[i] for i in keep]
+            res.labels = res.labels[keep]
+        n_new = min(n_new, delta_area)
+        spent0 = qledger.labeling
+        if n_new > 0:
+            width = n_r - off
+            flat = rng.choice(delta_area, size=n_new, replace=False)
+            new_pairs = [(int(t // width), off + int(t % width))
+                         for t in flat]
+            new_labels = label(new_pairs, "labeling")
+            res.pairs = res.pairs + new_pairs
+            res.labels = np.concatenate([res.labels,
+                                         np.asarray(new_labels, bool)])
+        res.n_r = n_r
+        dollars = qledger.labeling - spent0
+        res.dollars += dollars
+
+        # --- 2. refreshed adjusted target ---------------------------------
+        k_plus = int(res.labels.sum())
+        if k_plus == 0:
+            # no positives to calibrate against: record the check and keep
+            # the cached theta (nothing sounder is computable from here)
+            qledger.record_recalibration(swapped=False, drift=0.0,
+                                         dollars=dollars)
+            return
+        delta_recall = cfg.delta if cfg.precision_target >= 1.0 \
+            else cfg.delta / 2.0
+        adj = adj_target(k_plus, plan.sc_local.n_clauses, cfg.recall_target,
+                         delta_recall, n_pairs=n_l * n_r,
+                         k_sample=len(res.pairs), n_trials=cfg.mc_trials,
+                         seed=cfg.seed)
+
+        # --- 3. invariant check on free plane distances -------------------
+        planes = provider(plan.used_specs, qledger)
+        cd = plan.sc_local.clause_distances(
+            distance_stack(list(planes), res.pairs))
+        sel = np.all(cd <= plan.theta[None, :], axis=1)
+        recall = float((sel & res.labels).sum()) / k_plus
+        if recall >= adj.t_prime - 1e-12:
+            plan.t_prime = adj.t_prime
+            qledger.record_recalibration(swapped=False, drift=0.0,
+                                         dollars=dollars)
+            return
+
+        # --- 4. re-sweep + hot-swap ---------------------------------------
+        thr = min_fpr_thresholds(cd, res.labels, adj.t_prime, method="auto")
+        old_theta = np.asarray(plan.theta, float)
+        drift = float(np.max(np.abs(thr.theta - old_theta))) \
+            if thr.theta.shape == old_theta.shape else float("inf")
+        plan.theta = thr.theta
+        plan.t_prime = adj.t_prime
+        plan.feasible = thr.feasible
+        self._evals.pop(key, None)          # candidates predate the swap
+        qledger.record_recalibration(swapped=True, drift=drift,
+                                     dollars=dollars)
+
     def _delta_execute(self, cfg: FDJConfig, plan: JoinPlan,
                        cached: _EvalCache, label, provider,
                        qledger: CostLedger) -> Optional[JoinResult]:
@@ -284,11 +449,16 @@ class JoinService:
         n_l, n_r = self.dataset.n_l, self.dataset.n_r
         engine_stats = None
         if plan.degenerate:
-            delta_cands = [(i, j) for i in range(n_l)
-                           for j in range(off, n_r)]
+            # refine-everything over L × ΔR, labeled in bounded row blocks
+            # (the same chunking policy as core.join's barrier fallback —
+            # never one O(n_l·Δn_r) host list)
+            from repro.engine.base import iter_cross_product_chunks
             t0 = time.perf_counter()
-            labs = label(delta_cands, "refinement")
-            accepted = {p for p, l in zip(delta_cands, labs) if l}
+            accepted = set()
+            for block in iter_cross_product_chunks(n_l, n_r - off):
+                block = [(i, j + off) for (i, j) in block]
+                labs = label(block, "refinement")
+                accepted |= {p for p, l in zip(block, labs) if l}
             qledger.record_walls(0.0, time.perf_counter() - t0, 0.0)
         else:
             planes = provider(plan.used_specs, qledger)

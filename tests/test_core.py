@@ -94,7 +94,6 @@ def test_adj_target_r1_matches_classical_range():
 
 
 def test_recall_guarded_threshold_meets_target():
-    rng = np.random.default_rng(3)
     fails = 0
     trials = 20
     n_plus = 4000
@@ -155,3 +154,66 @@ def test_bargain_precision_subset_sound():
     if mask.any():
         assert truth[mask].mean() >= 0.75           # high-precision subset
         assert calls["n"] < n                       # cheaper than labeling all
+
+
+def _clause_distance_fixture(seed, k=800, c=3):
+    """Realistic clause-distance shapes: positives concentrated low with a
+    heavy tail, negatives spread high — per-clause separations differ so
+    the threshold surface is genuinely multi-dimensional."""
+    rng = np.random.default_rng(seed)
+    labels = rng.random(k) < 0.3
+    cd = np.empty((k, c), np.float32)
+    for j in range(c):
+        a, b = 1.5 + j, 6.0 - j
+        cd[:, j] = np.where(labels, rng.beta(a, b + 4, size=k),
+                            rng.beta(b, a, size=k))
+    return cd.astype(np.float32), labels
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("target", [0.8, 0.9, 0.95])
+def test_min_fpr_device_route_never_worse_than_greedy(seed, target):
+    """The tentpole A/B: the device sweep must always return a feasible
+    theta whose FPR is <= the greedy baseline's (it is best-of by
+    construction) and whose observed recall meets the target."""
+    cd, labels = _clause_distance_fixture(seed)
+    g = min_fpr_thresholds(cd, labels, target, method="greedy")
+    d = min_fpr_thresholds(cd, labels, target, method="device")
+    assert g.feasible and d.feasible
+    assert d.recall >= target - 1e-9
+    assert d.fpr <= g.fpr + 1e-12, \
+        f"device sweep returned worse FPR {d.fpr} than greedy {g.fpr}"
+    # auto routes to the device sweep when the kernel stack imports
+    a = min_fpr_thresholds(cd, labels, target, method="auto")
+    assert a.fpr == d.fpr and np.array_equal(a.theta, d.theta)
+
+
+def test_min_fpr_device_c1_matches_exact_sweep():
+    """C=1 is solved exactly by _sweep_1d; the device route must land on
+    the same optimum (its refinement IS the exact sweep for one clause)."""
+    rng = np.random.default_rng(7)
+    k = 600
+    labels = rng.random(k) < 0.35
+    d1 = np.where(labels, rng.beta(2, 7, size=k),
+                  rng.beta(6, 2, size=k)).astype(np.float32)[:, None]
+    for target in (0.8, 0.9, 1.0):
+        exact = min_fpr_thresholds(d1, labels, target, method="greedy")
+        dev = min_fpr_thresholds(d1, labels, target, method="device")
+        assert dev.feasible == exact.feasible
+        np.testing.assert_allclose(dev.theta, exact.theta)
+        assert abs(dev.fpr - exact.fpr) < 1e-12
+
+
+def test_min_fpr_method_validation_and_edge_cases():
+    cd, labels = _clause_distance_fixture(4)
+    with pytest.raises(ValueError):
+        min_fpr_thresholds(cd, labels, 0.9, method="exhaustive")
+    # no positives: infeasible +inf theta on every route
+    none = np.zeros(len(labels), bool)
+    for m in ("greedy", "device", "auto"):
+        r = min_fpr_thresholds(cd, none, 0.9, method=m)
+        assert not r.feasible and np.all(np.isinf(r.theta))
+    # zero clauses: trivially feasible empty theta
+    r0 = min_fpr_thresholds(np.zeros((10, 0), np.float32),
+                            labels[:10], 0.9, method="device")
+    assert r0.feasible and r0.theta.shape == (0,)

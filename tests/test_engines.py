@@ -6,7 +6,6 @@ sharded streaming backends must match it bit-for-bit — including ragged
 that failed extraction on every record.
 """
 
-import numpy as np
 import pytest
 
 from repro.core.costs import CostLedger
@@ -82,7 +81,6 @@ def test_engine_parity_all_missing_feature_column():
     """A featurization that failed on every record: clauses using it alone
     admit nothing (theta < 1); in a disjunction the partner carries it."""
     n_l, n_r = 41, 53                          # ragged on purpose
-    rng = np.random.default_rng(0)
     vals_l = [f"item {i % 7}" for i in range(n_l)]
     vals_r = [f"item {i % 7}" for i in range(n_r)]
     ok_spec = FeaturizationSpec("name", "", "word_overlap", "llm", "name")

@@ -60,3 +60,46 @@ def test_recall_guarantee_sweep(stream):
     assert fails / trials <= DELTA + slack, (
         f"failure rate {fails}/{trials} exceeds δ={DELTA} (+{slack:.3f} slack)")
     assert float(np.mean(recalls)) >= TARGET
+
+
+_SERVE_DATASETS = {
+    "movies": lambda seed: synth.movies_pages(
+        n_movies=25, cast_size=4, filler_sentences=1, seed=seed),
+    "police": lambda seed: synth.police_records(
+        n_incidents=30, reports_per_incident=2, seed=seed),
+}
+
+
+def _serving_trial(mk_ds, seed: int) -> float:
+    """Cold query -> distribution-shifting append -> recalibrated query:
+    the recall the *served* (recalibrated) path actually delivers."""
+    from repro.serving.join_service import (JoinService, hold_out_right,
+                                            perturb_rows)
+    ds = mk_ds(seed)
+    base, delta = hold_out_right(ds, max(ds.n_r // 4, 1))
+    cfg = FDJConfig(recall_target=TARGET, delta=DELTA, seed=seed,
+                    mc_trials=5000)
+    svc = JoinService(base, cfg)
+    svc.query()
+    svc.append_right(perturb_rows(delta, seed=seed))
+    return svc.query().join.recall
+
+
+@pytest.mark.slow
+def test_recall_guarantee_survives_shifted_appends():
+    """≥50 serving trials with a scripted distribution-shifting append
+    between the cold and the recalibrated query: observed failure rate of
+    the *post-shift* query must stay within δ plus two-sigma binomial
+    slack — recall as a serving-time invariant, not just a plan-time one."""
+    recalls = []
+    for name, mk in _SERVE_DATASETS.items():
+        for seed in range(25):
+            recalls.append(_serving_trial(mk, seed))
+    trials = len(recalls)
+    assert trials >= 50
+    fails = sum(r < TARGET for r in recalls)
+    slack = 2.0 * math.sqrt(DELTA * (1.0 - DELTA) / trials)
+    assert fails / trials <= DELTA + slack, (
+        f"post-shift failure rate {fails}/{trials} exceeds δ={DELTA} "
+        f"(+{slack:.3f} slack)")
+    assert float(np.mean(recalls)) >= TARGET

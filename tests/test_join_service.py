@@ -16,7 +16,8 @@ import pytest
 from repro.core.join import FDJConfig, execute_join, fdj_join
 from repro.data import synth
 from repro.data.simulated_llm import SimulatedExtractor, SimulatedProposer
-from repro.serving.join_service import JoinService, hold_out_right
+from repro.serving.join_service import (JoinService, hold_out_right,
+                                        perturb_rows)
 from repro.serving.planes import FeaturePlaneStore
 
 # small tiles keep interpret-mode pallas fast on the test shape
@@ -261,3 +262,76 @@ def _cold_same_plan(svc, cfg):
     return execute_join(svc.dataset, svc.dataset.make_oracle(),
                         SimulatedExtractor(svc.dataset, seed=0), cfg,
                         svc._plans[svc._plan_key(cfg)], keep_candidates=True)
+
+
+# --- online guarantee recalibration (DESIGN.md §4a) -------------------------
+
+def test_recalibration_restores_recall_after_shifted_append():
+    """The serving-time invariant: a distribution-shifting append (junk
+    tokens inflate the appended rows' clause distances) breaks the
+    carried-forward theta; the reservoir recalibration must detect it,
+    hot-swap theta via the device sweep, and restore recall >= T."""
+    full = _movies()
+    base, rows = hold_out_right(full, 10)
+    shifted = perturb_rows(rows, seed=1)
+    cfg = _cfg("numpy")
+    target = cfg.recall_target
+
+    # control: recalibration gated off — the historical carry-forward
+    # behavior silently voids the guarantee under this shift
+    ctl = JoinService(base, _cfg("numpy", recalibrate=False))
+    ctl.query()
+    ctl.append_right(shifted)
+    broken = ctl.query()
+    assert broken.cost.recalibrations == 0
+    assert broken.join.recall < target, \
+        "fixture too weak: the shift no longer breaks the cached theta"
+
+    svc = JoinService(base, cfg)
+    cold = svc.query()
+    svc.append_right(shifted)
+    post = svc.query()
+    led = post.cost
+    assert led.recalibrations == 1 and led.theta_swaps == 1
+    assert led.theta_drift > 0.0
+    assert led.reservoir_cost > 0.0          # top-up labels were charged
+    assert post.join.recall >= target - 1e-12, \
+        f"recalibrated recall {post.join.recall} < target {target}"
+    assert post.join.met_target
+    # the swap invalidated the cached evaluation: full re-eval, new theta
+    assert post.delta_rows == 0
+    assert not (post.join.theta == cold.join.theta).all()
+    # replay under the swapped plan is the steady state again: no further
+    # recalibration (reservoir extent matches the corpus), warm-path free
+    again = svc.query()
+    assert again.cost.recalibrations == 0
+    assert again.pairs == post.pairs
+
+
+def test_recalibration_keeps_delta_path_on_stable_append():
+    """Same-distribution appends must pass the reservoir invariant check
+    without swapping theta — the cheap incremental join survives."""
+    full = _movies()
+    base, rows = hold_out_right(full, 10)
+    svc = JoinService(base, _cfg("numpy"))
+    svc.query()
+    svc.append_right(rows)
+    dq = svc.query()
+    assert dq.cost.recalibrations == 1
+    assert dq.cost.theta_swaps == 0 and dq.cost.theta_drift == 0.0
+    assert dq.delta_rows == 10               # eval cache survived the check
+    assert dq.join.recall >= svc.cfg.recall_target - 1e-12
+
+
+def test_recalibration_skipped_for_degenerate_and_gated_off():
+    """Degenerate plans have no theta to calibrate; recalibrate=False is
+    the explicit opt-out — neither path runs a check."""
+    ds = _ds(n=8)
+    base, rows = hold_out_right(ds, 3)
+    svc = JoinService(base, _cfg("numpy", thresh_positives=1,
+                                 gen_positives=1, max_iter=1, gamma=2.0))
+    first = svc.query()
+    if not first.join.theta.shape[0]:        # degenerate as intended
+        svc.append_right(rows)
+        dq = svc.query()
+        assert dq.cost.recalibrations == 0

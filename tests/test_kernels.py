@@ -6,7 +6,8 @@ import pytest
 
 from repro.kernels.fused_cnf_join import ops as cnf_ops, ref as cnf_ref
 from repro.kernels.fused_cnf_join.kernel import SCAL, VEC, cnf_join_block
-from repro.kernels.threshold_sweep.ops import candidate_grid, sweep
+from repro.kernels.threshold_sweep.ops import (candidate_grid, sweep,
+                                               sweep_counts)
 from repro.kernels.threshold_sweep.ref import threshold_sweep_ref
 
 
@@ -120,3 +121,95 @@ def test_missing_value_encoding_forces_max_distance():
     assert d[0, 0] < 0.01            # identical token sets
     assert np.all(d[1, :] >= 0.999)  # missing left row
     assert np.all(d[:, 2] >= 0.999)  # missing right row
+
+
+def _count_oracle(cd, labels, th):
+    """Plain-numpy (pos, sel) counts — the ground truth both the kernel
+    and the jitted ref must reproduce, pad rows or not."""
+    selm = np.all(cd[None, :, :] <= th[:, None, :], axis=-1)
+    return ((selm & labels[None, :]).sum(axis=1).astype(np.float32),
+            selm.sum(axis=1).astype(np.float32))
+
+
+def test_threshold_sweep_pad_rows_not_counted():
+    """Regression: cd used to be padded with +inf, relying on ``inf <= th``
+    being false — but ``inf <= inf`` is TRUE, so any +inf threshold column
+    (emitted for positive-free samples, hit by all-missing features) counted
+    every pad row into ``sel``.  With k=100 under a 256-row tile, the old
+    kernel reported sel=256 for an all-+inf theta; the explicit validity
+    mask must report exactly k."""
+    k, c = 100, 2
+    rng = np.random.default_rng(5)
+    cd = rng.uniform(0, 1, size=(k, c)).astype(np.float32)
+    labels = rng.random(k) < 0.4
+    th = np.array([[np.inf, np.inf],       # admits every real row — and,
+                                           # before the fix, every pad row
+                   [np.inf, 0.5],
+                   [-np.inf, 0.5]],        # admits nothing (d >= 0 > -inf)
+                  np.float32)
+    pos, sel = sweep(cd, labels, th, tg=64, tk=256)
+    want_pos, want_sel = _count_oracle(cd, labels, th)
+    np.testing.assert_array_equal(sel, want_sel)
+    np.testing.assert_array_equal(pos, want_pos)
+    assert sel[0] == k and pos[0] == labels.sum()
+    assert sel[2] == 0 and pos[2] == 0
+
+
+def test_threshold_sweep_inf_distances_ragged_tiles():
+    """±inf thresholds and +inf distances through non-tile-multiple k and
+    G — kernel, jitted ref, and plain numpy all agree exactly."""
+    k, c, g = 333, 3, 37                   # 333 % 128 != 0, 37 % 16 != 0
+    rng = np.random.default_rng(9)
+    cd = rng.uniform(0, 1, size=(k, c)).astype(np.float32)
+    cd[rng.random(size=(k, c)) < 0.08] = np.inf   # failed extractions
+    labels = rng.random(k) < 0.3
+    th = rng.uniform(0, 1, size=(g, c)).astype(np.float32)
+    th[0] = np.inf
+    th[-1] = -np.inf
+    th[5, 1] = np.inf                      # mixed row
+    pos, sel = sweep(cd, labels, th, tg=16, tk=128)
+    want_pos, want_sel = _count_oracle(cd, labels, th)
+    np.testing.assert_array_equal(pos, want_pos)
+    np.testing.assert_array_equal(sel, want_sel)
+    ref = np.asarray(threshold_sweep_ref(
+        jnp.asarray(cd), jnp.asarray(labels.astype(np.float32)),
+        jnp.asarray(th)))
+    np.testing.assert_array_equal(ref[:, 0], want_pos)
+    np.testing.assert_array_equal(ref[:, 1], want_sel)
+
+
+def test_sweep_counts_dispatcher_parity():
+    """The guarantee path's ``sweep_counts`` (jitted jnp ref on CPU, the
+    pallas kernel on accelerators) is bit-for-bit the padded kernel."""
+    rng = np.random.default_rng(11)
+    k, c, g = 500, 2, 90
+    cd = rng.uniform(0, 1, size=(k, c)).astype(np.float32)
+    labels = rng.random(k) < 0.25
+    th = rng.uniform(0, 1, size=(g, c)).astype(np.float32)
+    th[3] = np.inf
+    pos_d, sel_d = sweep_counts(cd, labels, th)
+    pos_k, sel_k = sweep(cd, labels, th, tg=64, tk=256)
+    np.testing.assert_array_equal(pos_d, pos_k)
+    np.testing.assert_array_equal(sel_d, sel_k)
+    # empty grid: well-defined empty counts, no kernel launch
+    pos_e, sel_e = sweep_counts(cd, labels, np.zeros((0, c), np.float32))
+    assert pos_e.shape == (0,) and sel_e.shape == (0,)
+
+
+def test_candidate_grid_cap_and_recall_corner():
+    """The cartesian grid is capped (no 24^C blowup) and always contains
+    the per-dim positive-max corner, so recall-1 stays reachable."""
+    rng = np.random.default_rng(3)
+    pos = rng.uniform(0, 1, size=(600, 5)).astype(np.float32)
+    grid = candidate_grid(pos, max_per_dim=24, max_grid=512)
+    assert grid.shape[1] == 5
+    # the shrink loop bounds prod(counts) by max_grid; the appended
+    # recall-1 corner can at most double each axis
+    assert grid.shape[0] <= 512 * 2 ** 5
+    assert grid.shape[0] < 24 ** 5 / 100
+    corner = pos.max(axis=0)
+    assert any(np.allclose(row, corner) for row in grid), \
+        "per-dim positive max (recall-1 corner) missing from the grid"
+    # degenerate: no clauses
+    empty = candidate_grid(np.zeros((4, 0), np.float32))
+    assert empty.shape == (1, 0)

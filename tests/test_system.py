@@ -85,8 +85,7 @@ def test_oracle_label_cache_no_double_charge():
     oracle = ds.make_oracle()
     pairs = [(0, 0), (1, 1)]
     oracle.label_pairs(pairs, kind="labeling")
-    c1 = oracle.ledger.total
-    res_cached = oracle.label_pairs(pairs, kind="labeling")
+    oracle.label_pairs(pairs, kind="labeling")
     # SimulatedOracle itself charges again (no cache) — fdj_join's label()
     # wrapper is what dedupes; assert the wrapper behaviour instead:
     from repro.core.join import fdj_join as _  # noqa: F401
