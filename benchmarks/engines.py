@@ -70,12 +70,17 @@ def run(fast: bool = True):
                    "bytes_to_host": res.stats.bytes_to_host,
                    "bytes_reshard": res.stats.bytes_reshard,
                    "plane_bytes": res.stats.plane_bytes,
+                   "conjunct_evals": res.stats.conjunct_evals,
+                   "flops_per_candidate": round(
+                       res.stats.flops_per_candidate, 2),
                    "agrees_with_numpy": agree}
             rows.append(row)
             print(f"engines,{name},{ename},candidates={row['candidates']},"
                   f"bytes_to_host={row['bytes_to_host']},"
                   f"plane_bytes={row['plane_bytes']},wall_s={row['wall_s']},"
-                  f"overlap_s={row['overlap_s']},agree={agree}")
+                  f"overlap_s={row['overlap_s']},"
+                  f"flops_per_candidate={row['flops_per_candidate']},"
+                  f"agree={agree}")
             if not agree:
                 raise AssertionError(
                     f"engine {ename} disagrees with numpy on {name}")
@@ -94,6 +99,9 @@ def run_multipod(mesh: str = "2,16,16") -> list:
            "dispatch_wall_s": p["dispatch_wall_s"],
            "pull_wall_s": p["pull_wall_s"],
            "overlap_s": p["overlap_s"],
+           "prefetch_depth": p["prefetch_depth"],
+           "conjunct_evals": p["conjunct_evals"],
+           "flops_per_candidate": p["flops_per_candidate"],
            "plane_bytes": p["plane_bytes"], "agrees_with_numpy": True,
            "cross_pod_collective_bytes": h["cross_pod_bytes"],
            "max_cross_pod_op_bytes": h["max_cross_op_bytes"],
@@ -107,6 +115,8 @@ def run_multipod(mesh: str = "2,16,16") -> list:
           f"cross_pod_bytes={row['cross_pod_collective_bytes']},"
           f"warm_reshard_bytes={row['warm_reshard_bytes']},"
           f"overlap_s={row['overlap_s']},"
+          f"prefetch_depth={row['prefetch_depth']},"
+          f"flops_per_candidate={row['flops_per_candidate']},"
           f"wall_s={row['wall_s']}")
     return [row]
 

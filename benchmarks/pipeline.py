@@ -124,7 +124,11 @@ def run(fast: bool = True):
                      "total_wall": round(stream_total, 4),
                      "engine_dispatch_s": round(pr.stats.engine_dispatch_s, 4),
                      "engine_pull_s": round(pr.stats.engine_pull_s, 4),
-                     "engine_overlap_s": round(pr.stats.engine_overlap_s, 4)})
+                     "engine_overlap_s": round(pr.stats.engine_overlap_s, 4),
+                     "conjunct_evals": pr.stats.engine_conjunct_evals,
+                     "flops_per_candidate": round(
+                         pr.stats.engine_conjunct_evals
+                         / max(len(pr.candidates), 1), 2)})
 
         for row in rows[-2:]:
             print(f"pipeline,{row['engine']},{row['mode']},"
@@ -144,6 +148,79 @@ def run(fast: bool = True):
     rows.append({"engine": "ALL", "mode": "summary", **{
         k + "_total": round(v, 4) for k, v in totals.items()}})
     rows.append(run_double_buffer_ab(fast))
+    rows.extend(run_conjunct_order_ab())
+    return rows
+
+
+def _skewed_selectivity_fixture():
+    """33 x 128, 2-clause CNF with skewed selectivity: the clause listed
+    first passes every pair, the second matches only R band [64, 96) —
+    the regime where selectivity ordering + the conjunct short-circuit
+    pay (3 of 4 r_chunk=32 bands die after one conjunct when the banded
+    clause is evaluated first)."""
+    from repro.core.featurize import FeaturizationSpec, vectorize
+    n_l, n_r = 33, 128
+    tag = FeaturizationSpec("tag", "", "word_overlap", "llm", "tag")
+    name = FeaturizationSpec("name", "", "word_overlap", "llm", "name")
+    feats = [vectorize(tag, ["x"] * n_l, ["x"] * n_r),
+             vectorize(name, ["same text"] * n_l,
+                       ["zzz yyy"] * 64 + ["same text"] * 32
+                       + ["zzz yyy"] * 32)]
+    return feats, [[0], [1]], [0.5, 0.25]
+
+
+def run_conjunct_order_ab() -> list:
+    """Ordered short-circuit vs unordered full width, per backend.
+
+    Acceptance (the ISSUE's headline property, CI-gated through the
+    ``flops_per_candidate`` ceiling in the committed baseline): on the
+    skewed-selectivity regime every backend returns the *identical*
+    candidate set while the ordered + early-reject arm charges strictly
+    fewer ``conjunct_evals`` than the full-width control.
+    """
+    import numpy as np
+    from repro.core.join import apply_conjunct_order
+    from repro.core.scaffold import ordered_conjuncts
+
+    feats, clauses, thetas = _skewed_selectivity_fixture()
+    # what the plan measures for free on S': the banded clause goes first
+    cd = np.array([[0.0, 1.0]] * 6 + [[0.0, 0.0]] * 2)
+    order = ordered_conjuncts(cd, np.asarray(thetas, float), clauses)
+    assert order == [1, 0], f"skew fixture mis-ordered: {order}"
+    oc, ot = apply_conjunct_order(clauses, np.asarray(thetas, float), order)
+
+    opts = {"numpy": dict(block=32),
+            "pallas": dict(tl=32, tr=64, l_block=32),
+            "sharded": dict(tl=32, tr=32, r_chunk=32, capacity=2048)}
+    rows = []
+    for ename in ("numpy", "pallas", "sharded"):
+        full = get_engine(ename, early_reject=False, **opts[ename]).evaluate(
+            feats, clauses, thetas)
+        ordered = get_engine(ename, **opts[ename]).evaluate(
+            feats, oc, list(ot))
+        assert ordered.candidates == full.candidates, (
+            f"conjunct order changed the candidate set on {ename}")
+        assert 0 < ordered.stats.conjunct_evals < full.stats.conjunct_evals, (
+            f"short-circuit saved nothing on {ename}: "
+            f"{ordered.stats.conjunct_evals} vs {full.stats.conjunct_evals}")
+        row = {"engine": ename, "mode": "conjunct_order_ab",
+               "candidates": ordered.stats.n_candidates,
+               "conjunct_evals": ordered.stats.conjunct_evals,
+               "full_width_evals": full.stats.conjunct_evals,
+               "flops_per_candidate": round(
+                   ordered.stats.flops_per_candidate, 2),
+               "full_flops_per_candidate": round(
+                   full.stats.flops_per_candidate, 2),
+               "evals_saved_pct": round(
+                   100.0 * (1 - ordered.stats.conjunct_evals
+                            / full.stats.conjunct_evals), 1)}
+        rows.append(row)
+        print(f"pipeline,{ename},conjunct_order_ab,"
+              f"candidates={row['candidates']},"
+              f"conjunct_evals={row['conjunct_evals']},"
+              f"full_width_evals={row['full_width_evals']},"
+              f"flops_per_candidate={row['flops_per_candidate']},"
+              f"evals_saved_pct={row['evals_saved_pct']}")
     return rows
 
 

@@ -246,13 +246,14 @@ _GATES = {
         "metrics": ("wall_s", "bytes_to_host", "candidates",
                     "agrees_with_numpy", "cross_pod_collective_bytes",
                     "max_cross_pod_op_bytes", "warm_reshard_bytes",
-                    "warm_extraction_cost", "overlap_s"),
+                    "warm_extraction_cost", "overlap_s",
+                    "flops_per_candidate"),
     },
     "pipeline": {
         "key": ("engine", "mode"),
         "metrics": ("candidates", "t_first_s", "total_wall",
                     "db_busy_s", "serial_busy_s", "db_overlap_s",
-                    "engine_overlap_s"),
+                    "engine_overlap_s", "flops_per_candidate"),
     },
     "serving": {
         "key": ("engine", "mode"),
@@ -293,6 +294,14 @@ def _metric_band(field: str):
         # but dropping more than the slack below it means the calibration
         # path regressed, regardless of how fast or cheap the run got.
         return ("recall", 0.0, 0.02)
+    if field == "flops_per_candidate":
+        # a ceiling: (pair, clause) work per emitted candidate.  Dropping
+        # below the baseline is free (a better short-circuit); creeping
+        # above it means the selectivity ordering / early-reject path
+        # silently regressed toward full-width evaluation — a compute
+        # regression the wall band on an interpret-mode CPU run would
+        # never resolve.
+        return ("ceil", 1.10, 0.5)
     if field.endswith("overlap_s"):
         # a floor, not a ceiling: overlap seconds measure whether the
         # double-buffered band loop actually kept a step in flight during
@@ -378,6 +387,28 @@ def check_against(baseline_dir: str, regimes, crashed=()) -> list:
     return bad
 
 
+def write_trajectory(pr: str, ran, crashed) -> str:
+    """Write ``BENCH_<pr>.json`` at the repo root: a per-PR snapshot of
+    every regime's fresh rows, so the repo accumulates a perf *history*
+    (one artifact per PR) rather than only the latest rolling baseline —
+    trajectory regressions ("each PR 5% slower") are invisible to a
+    baseline that moves with every merge."""
+    regimes = {}
+    for name in ran:
+        path = os.path.join(RESULTS_DIR, f"{name}.json")
+        if os.path.exists(path):
+            with open(path) as f:
+                regimes[name] = json.load(f)
+    art = {"pr": pr, "regimes_run": list(ran), "regimes_crashed": list(crashed),
+           "regimes": regimes}
+    out = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), f"BENCH_{pr}.json")
+    with open(out, "w") as f:
+        json.dump(art, f, indent=1, default=str)
+    print(f"# trajectory artifact: {out}")
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
@@ -389,6 +420,10 @@ def main() -> None:
                     help="after running, compare fresh results to the "
                          "baseline JSONs in DIR and exit nonzero on any "
                          "perf/cost regression (see module docstring)")
+    ap.add_argument("--pr", default=os.environ.get("FDJ_PR", ""),
+                    help="PR number/tag: write a BENCH_<pr>.json "
+                         "trajectory artifact at the repo root (default: "
+                         "$FDJ_PR; empty = skip)")
     args = ap.parse_args()
     only = [s for s in args.only.split(",") if s]
     unknown = [s for s in only if s not in ALL]
@@ -413,6 +448,8 @@ def main() -> None:
                 raise
             crashed.append(name)
     print(f"# total wall time: {time.time()-t0:.0f}s")
+    if args.pr:
+        write_trajectory(args.pr, ran, crashed)
     if args.check_against:
         bad = check_against(args.check_against, ran, crashed=crashed)
         if bad:

@@ -48,6 +48,11 @@ class CostLedger:
     step2_dispatch_wall: float = 0.0
     step2_pull_wall: float = 0.0
     step2_overlap_wall: float = 0.0
+    # (pair, clause) evaluations step ② actually computed (the conjunct
+    # short-circuit's honest FLOPs proxy — EngineStats.conjunct_evals,
+    # including padding and overflow-retry re-work).  A count, not
+    # dollars; reported via wall_summary(), kept out of breakdown().
+    step2_conjunct_evals: int = 0
     # serving counters (DESIGN.md §4): plane-store traffic for this query.
     # Counts, not dollars — the whole point of the store is that a plane
     # hit costs $0; reported via serving_summary(), kept out of total.
@@ -106,6 +111,7 @@ class CostLedger:
         if stats is not None:
             self.record_engine_walls(stats.dispatch_wall_s,
                                      stats.pull_wall_s, stats.overlap_s)
+            self.step2_conjunct_evals += int(stats.conjunct_evals)
 
     def record_plane_traffic(self, *, hits: int = 0, misses: int = 0,
                              evicted_bytes: int = 0, resident_bytes: int = 0,
@@ -141,6 +147,7 @@ class CostLedger:
         self.record_engine_walls(other.step2_dispatch_wall,
                                  other.step2_pull_wall,
                                  other.step2_overlap_wall)
+        self.step2_conjunct_evals += other.step2_conjunct_evals
         self.record_plane_traffic(
             hits=other.plane_hits, misses=other.plane_misses,
             evicted_bytes=other.plane_evicted_bytes,
@@ -178,6 +185,7 @@ class CostLedger:
             "step2_dispatch_wall": self.step2_dispatch_wall,
             "step2_pull_wall": self.step2_pull_wall,
             "step2_overlap_wall": self.step2_overlap_wall,
+            "step2_conjunct_evals": self.step2_conjunct_evals,
         }
 
     @property

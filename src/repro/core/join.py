@@ -78,6 +78,14 @@ class FDJConfig:
     stream_refinement: bool = False  # pipeline step ⑨ over step ②'s stream
     refine_batch_pairs: int = 512  # oracle batch size inside the pump
     pump_queue_chunks: int = 4     # bounded chunk queue (engine backpressure)
+    prefetch_depth: Optional[int] = None  # sharded engine: band steps in
+    #   flight at once (None = engine default, 2; 1 = serial A/B control);
+    #   execution-only, never part of a serving plan key
+    order_conjuncts: bool = True   # evaluate conjuncts in the plan's
+    #   measured cheapest-and-most-selective-first order (plan_join rates
+    #   them on the threshold sample for free; candidate set is invariant
+    #   — the conjunction commutes); False = the scaffold's natural order,
+    #   the A/B control.  Execution-only, never part of a serving plan key
     recalibrate: bool = True       # serving: keep cached plans' theta
     #   calibrated online — after appends shift plane distributions, the
     #   JoinService refreshes a labeled reservoir, re-runs adj_target +
@@ -110,6 +118,12 @@ class JoinPlan:
     # charged by step ④ — carrying them is free.
     calib_pairs: Optional[list] = None
     calib_labels: Optional[np.ndarray] = None
+    # measured conjunct evaluation order (scaffold.ordered_conjuncts on
+    # S′'s clause distances — free, they were computed for threshold
+    # selection anyway).  A permutation of range(n_clauses) or None; pure
+    # execution hint: candidate set is invariant under it.  Serving keeps
+    # it with the cached plan and refreshes it on theta recalibration.
+    conjunct_order: Optional[list] = None
 
     @property
     def degenerate(self) -> bool:
@@ -207,15 +221,21 @@ def plan_join(dataset, oracle, proposer, extractor, cfg: FDJConfig, *,
         thr = min_fpr_thresholds(cd2, y2, t_prime, method="auto")
         theta = thr.theta
         feasible = thr.feasible
+        # rate each conjunct's selectivity on the same S′ distances —
+        # free measurement, consumed by the engines' short-circuit
+        conjunct_order = scaffold_lib.ordered_conjuncts(
+            cd2, theta, sc_local.clauses)
     else:
         t_prime = 1.0
         theta = np.zeros(0)
         feasible = False
+        conjunct_order = None
 
     return JoinPlan(specs=specs, scaffold=sc, used_specs=used_specs,
                     sc_local=sc_local, theta=theta, t_prime=t_prime,
                     feasible=feasible, calib_pairs=list(s2),
-                    calib_labels=np.asarray(y2, bool))
+                    calib_labels=np.asarray(y2, bool),
+                    conjunct_order=conjunct_order)
 
 
 def execute_join(dataset, oracle, extractor, cfg: FDJConfig, plan: JoinPlan,
@@ -259,7 +279,8 @@ def execute_join(dataset, oracle, extractor, cfg: FDJConfig, plan: JoinPlan,
         if plan.degenerate:
             chunk_iter = _degenerate_chunks(n_l, n_r)
         else:
-            chunk_iter = _stream_cnf(feats, plan.sc_local, plan.theta, cfg)
+            chunk_iter = _stream_cnf(feats, plan.sc_local, plan.theta, cfg,
+                                     order=plan.conjunct_order)
         if cfg.precision_target >= 1.0:
             def refine_chunk(batch):
                 labs = label(batch, "refinement")
@@ -302,8 +323,9 @@ def execute_join(dataset, oracle, extractor, cfg: FDJConfig, plan: JoinPlan,
             # full list is materialized for the precision ladder only
             candidates = [(i, j) for i in range(n_l) for j in range(n_r)]
         else:
-            candidates, engine_stats = _evaluate_cnf(feats, plan.sc_local,
-                                                     plan.theta, cfg)
+            candidates, engine_stats = _evaluate_cnf(
+                feats, plan.sc_local, plan.theta, cfg,
+                order=plan.conjunct_order)
         out_pairs = set()
         cand_arr = list(candidates)
         n_cands = len(cand_arr)
@@ -347,20 +369,50 @@ def fdj_join(dataset, oracle, proposer, extractor, cfg: FDJConfig,
                         label=label)
 
 
-def _evaluate_cnf(feats, sc: Scaffold, theta: np.ndarray, cfg: FDJConfig):
+def apply_conjunct_order(clauses: list, theta: np.ndarray,
+                         order: Optional[list]):
+    """Permute (clauses, theta) jointly by the plan's measured evaluation
+    order.  A no-op (the natural order) when ``order`` is None; raises if
+    ``order`` is not a permutation of the clause indices — a stale order
+    from a structurally different scaffold must never silently misalign
+    thresholds with clauses."""
+    if order is None:
+        return clauses, theta
+    if sorted(order) != list(range(len(clauses))):
+        raise ValueError(
+            f"conjunct order {order} is not a permutation of "
+            f"{len(clauses)} clauses")
+    return [clauses[i] for i in order], theta[np.asarray(order, int)]
+
+
+def _ordered_cnf(sc: Scaffold, theta: np.ndarray, cfg: FDJConfig,
+                 order: Optional[list]):
+    if not cfg.order_conjuncts:
+        order = None
+    return apply_conjunct_order(sc.clauses, theta, order)
+
+
+def _evaluate_cnf(feats, sc: Scaffold, theta: np.ndarray, cfg: FDJConfig,
+                  order: Optional[list] = None):
     """Step 2: CNF evaluation over the full cross product via repro.engine.
 
     Returns (candidates, EngineStats).  Engine selection/backends live in
     ``repro.engine`` (DESIGN.md section 2); materialization/charging
-    happened upstream through the plane provider."""
-    res = _get_engine(cfg).evaluate(feats, sc.clauses, theta)
+    happened upstream through the plane provider.  ``order`` is the plan's
+    measured conjunct order — an execution hint only (the candidate set
+    is invariant; all three backends get the same permuted clause list,
+    so cross-backend parity is preserved)."""
+    clauses, th = _ordered_cnf(sc, theta, cfg, order)
+    res = _get_engine(cfg).evaluate(feats, clauses, th)
     return res.candidates, res.stats
 
 
-def _stream_cnf(feats, sc: Scaffold, theta: np.ndarray, cfg: FDJConfig):
+def _stream_cnf(feats, sc: Scaffold, theta: np.ndarray, cfg: FDJConfig,
+                order: Optional[list] = None):
     """Streaming step ②: hands back the engine's chunk iterator for the
     RefinementPump."""
-    return _get_engine(cfg).evaluate_stream(feats, sc.clauses, theta)
+    clauses, th = _ordered_cnf(sc, theta, cfg, order)
+    return _get_engine(cfg).evaluate_stream(feats, clauses, th)
 
 
 def _get_engine(cfg: FDJConfig):
@@ -371,9 +423,12 @@ def _get_engine(cfg: FDJConfig):
         opts = dict(opts.get(cfg.engine, {}))
     if cfg.engine == "numpy":
         opts.setdefault("block", cfg.block)
-    if cfg.engine == "sharded" and cfg.pods > 1 and "mesh" not in opts:
-        from repro.distributed.mesh import make_join_mesh
-        opts["mesh"] = make_join_mesh(n_pods=cfg.pods)
+    if cfg.engine == "sharded":
+        if cfg.prefetch_depth is not None:
+            opts.setdefault("prefetch_depth", cfg.prefetch_depth)
+        if cfg.pods > 1 and "mesh" not in opts:
+            from repro.distributed.mesh import make_join_mesh
+            opts["mesh"] = make_join_mesh(n_pods=cfg.pods)
     return get_engine(cfg.engine, **opts)
 
 

@@ -58,6 +58,11 @@ class PumpStats:
     engine_dispatch_s: float = 0.0
     engine_pull_s: float = 0.0
     engine_overlap_s: float = 0.0
+    engine_conjunct_evals: int = 0     # (pair, clause) evals step ② did
+    # chunks the worker's failure handler consumed-and-discarded after its
+    # refine callback died: the producer may race a few puts in before it
+    # notices the failure, and silence here would look like refined work
+    chunks_dropped: int = 0
 
 
 @dataclasses.dataclass
@@ -80,12 +85,17 @@ class RefinementPump:
         self.max_queue_chunks = int(max_queue_chunks)
         if self.batch_pairs <= 0 or self.max_queue_chunks <= 0:
             raise ValueError("batch_pairs and max_queue_chunks must be >= 1")
+        # the stats of the most recent run(), kept observable even when
+        # run() raises (a dead worker's PumpResult never materializes but
+        # its chunks_dropped count still matters to the caller)
+        self.last_stats: Optional[PumpStats] = None
 
     def run(self, chunks: Iterable[CandidateChunk],
             ledger=None) -> PumpResult:
         """Drain ``chunks`` (engine work happens in this thread's ``next``
         calls), refining concurrently; returns accepted pairs + accounting."""
         stats = PumpStats()
+        self.last_stats = stats
         accepted: set = set()
         candidates: list = []
         chunk_stats: list = []
@@ -96,6 +106,7 @@ class RefinementPump:
 
         def worker():
             pending: list = []
+            done_seen = False
 
             def flush(batch):
                 t0 = time.perf_counter()
@@ -107,7 +118,10 @@ class RefinementPump:
                 while True:
                     item = q.get()
                     if item is _DONE:
-                        break
+                        done_seen = True
+                        if pending:
+                            flush(pending)
+                        return
                     pending.extend(item)
                     # cursor, not repeated slicing: one giant chunk (the
                     # degenerate refine-everything path) stays O(pairs)
@@ -117,25 +131,18 @@ class RefinementPump:
                         start += self.batch_pairs
                     if start:
                         pending = pending[start:]
-                if pending:
-                    flush(pending)
             except BaseException as e:   # surface in the caller, not stderr
                 failure.append(e)
-                while True:              # unblock a producer waiting on put()
-                    try:
-                        q.get_nowait()
-                    except queue.Empty:
-                        break
-
-        def put(item):
-            # failure-aware put: a plain q.put could block forever if the
-            # worker died (nobody consumes) while the queue is full
-            while not failure:
-                try:
-                    q.put(item, timeout=0.05)
-                    return
-                except queue.Full:
-                    continue
+                # sink mode: keep consuming until the producer's _DONE so a
+                # plain blocking q.put always completes — the wakeup the
+                # producer relies on — and count what worker death throws
+                # away instead of discarding it silently.  (If the tail
+                # flush above raised, _DONE was already consumed: don't
+                # block on a queue nobody will feed again.)
+                while not done_seen:
+                    if q.get() is _DONE:
+                        return
+                    stats.chunks_dropped += 1
 
         t_start = time.perf_counter()
         w = None
@@ -155,7 +162,12 @@ class RefinementPump:
                 candidates.extend(chunk.candidates)
                 chunk_stats.append(chunk.stats)
                 if w is not None and chunk.candidates:
-                    put(chunk.candidates)    # bounded: backpressures step ②
+                    # plain blocking put — bounded, so it backpressures
+                    # step ② when the oracle is the slow side, and safe:
+                    # a dead worker's failure handler keeps consuming
+                    # until _DONE, so this can never hang (and never
+                    # busy-waits producer wall into step2_wall)
+                    q.put(chunk.candidates)
         finally:
             # the engine stream may raise mid-sweep: still shut the worker
             # down (discarding queued-but-unrefined chunks) so no thread
@@ -167,7 +179,7 @@ class RefinementPump:
                             q.get_nowait()
                         except queue.Empty:
                             break
-                put(_DONE)
+                q.put(_DONE)
                 w.join()
 
         if w is not None and failure:
@@ -193,6 +205,7 @@ class RefinementPump:
             stats.engine_dispatch_s = engine_stats.dispatch_wall_s
             stats.engine_pull_s = engine_stats.pull_wall_s
             stats.engine_overlap_s = engine_stats.overlap_s
+            stats.engine_conjunct_evals = engine_stats.conjunct_evals
             if ledger is not None:
                 ledger.record_engine_stats(engine_stats)
         return PumpResult(pairs=accepted, candidates=candidates,

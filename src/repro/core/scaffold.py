@@ -238,6 +238,41 @@ def _greedy(cd: np.ndarray, labels: np.ndarray, theta0: np.ndarray,
     return ThresholdResult(theta, fpr, recall, True)
 
 
+def ordered_conjuncts(cd: np.ndarray, theta: np.ndarray,
+                      clauses: list) -> list:
+    """Cheapest-and-most-selective-first conjunct order for short-circuit
+    CNF evaluation (the classic selectivity ordering for AND chains).
+
+    cd: (k, C) clause distances on the threshold sample (step ⑤'s S′ —
+    already computed for threshold selection, so measurement is free);
+    theta: (C,) selected thresholds; clauses: the scaffold's clause list
+    (cost proxy = clause width, the number of distance planes it min-
+    reduces).
+
+    Rank = cost / (1 - pass_rate): the expected planes evaluated per
+    rejection if this conjunct goes first.  Pass-everything conjuncts
+    (pass_rate ~ 1) reject nothing and sort last.  Ties break by
+    (pass_rate, cost, original index) so the order is deterministic.
+    Returns a permutation of range(C) — a pure *evaluation* order: the
+    conjunction commutes, so the candidate set is invariant under it
+    (tests/test_conjunct_order.py proves it per backend).
+    """
+    c = cd.shape[1]
+    if c != len(clauses) or theta.shape[0] != c:
+        raise ValueError(
+            f"clause-distance width {c} disagrees with {len(clauses)} "
+            f"clauses / {theta.shape[0]} thresholds")
+    if cd.shape[0] == 0:
+        return list(range(c))
+    rates = (cd <= theta[None, :]).mean(axis=0)
+    def rank(ci):
+        cost = max(len(clauses[ci]), 1)
+        reject = 1.0 - float(rates[ci])
+        key = cost / reject if reject > 1e-12 else math.inf
+        return (key, float(rates[ci]), cost, ci)
+    return sorted(range(c), key=rank)
+
+
 # ---------------------------------------------------------------------------
 # Alg 4 — greedy scaffold construction
 # ---------------------------------------------------------------------------

@@ -99,11 +99,25 @@ class EngineStats:
     # multi-pod serving invariant, DESIGN.md §4).  Always 0 for the
     # single-device backends.
     bytes_reshard: int = 0
+    # (pair, clause) evaluations actually computed for this chunk — the
+    # honest FLOPs proxy behind the conjunct short-circuit (DESIGN.md §3).
+    # Counts padded pairs and retry re-attempts (work the device really
+    # did), so an "optimization" that merely moves work elsewhere cannot
+    # hide.  Full-width CNF charges n_pairs * n_clauses; early rejection
+    # charges 1 clause for every tile/band whose first-conjunct popcount
+    # was zero.
+    conjunct_evals: int = 0
 
     @property
     def plane_bytes(self) -> int:
         """Size of the full boolean match plane — the O(n²) yardstick."""
         return self.n_l * self.n_r
+
+    @property
+    def flops_per_candidate(self) -> float:
+        """Conjunct evaluations per surviving candidate — the step-② cost
+        ratio the short-circuit is gated on (lower is better)."""
+        return self.conjunct_evals / max(self.n_candidates, 1)
 
     def as_dict(self) -> dict:
         return {
@@ -116,6 +130,8 @@ class EngineStats:
             "bytes_h2d": self.bytes_h2d,
             "bytes_reshard": self.bytes_reshard,
             "plane_bytes": self.plane_bytes,
+            "conjunct_evals": self.conjunct_evals,
+            "flops_per_candidate": self.flops_per_candidate,
         }
 
     @classmethod
@@ -134,6 +150,7 @@ class EngineStats:
             out.bytes_to_host += d.bytes_to_host
             out.bytes_h2d += d.bytes_h2d
             out.bytes_reshard += d.bytes_reshard
+            out.conjunct_evals += d.conjunct_evals
         return out
 
 
@@ -157,6 +174,7 @@ class ChunkDelta:
     dispatch_s: float = 0.0            # host time enqueueing device steps
     pull_s: float = 0.0                # host time pulling + filtering
     overlap_s: float = 0.0             # host work done with a step in flight
+    conjunct_evals: int = 0            # (pair, clause) evals this chunk did
 
 
 @dataclasses.dataclass
@@ -241,7 +259,8 @@ class CnfEngine(abc.ABC):
                                    overlap_s=delta.overlap_s,
                                    bytes_to_host=delta.bytes_to_host,
                                    bytes_h2d=delta.bytes_h2d,
-                                   bytes_reshard=delta.bytes_reshard), idx)
+                                   bytes_reshard=delta.bytes_reshard,
+                                   conjunct_evals=delta.conjunct_evals), idx)
             t_prev = time.perf_counter()
 
     @abc.abstractmethod

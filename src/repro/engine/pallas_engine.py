@@ -24,12 +24,15 @@ class PallasEngine(CnfEngine):
 
     def __init__(self, tl: int = 256, tr: int = 512,
                  interpret: Optional[bool] = None,
-                 l_block: Optional[int] = None):
-        """l_block: rows per streamed chunk (multiple of tl; default 4*tl)."""
+                 l_block: Optional[int] = None, early_reject: bool = True):
+        """l_block: rows per streamed chunk (multiple of tl; default 4*tl).
+        early_reject=False forces full-width CNF on every tile (the A/B
+        control for the conjunct_evals gate)."""
         self.tl = int(tl)
         self.tr = int(tr)
         self.interpret = interpret
         self.l_block = int(l_block) if l_block else 4 * self.tl
+        self.early_reject = bool(early_reject)
         if self.l_block % self.tl != 0:
             raise ValueError(
                 f"l_block={self.l_block} must be a multiple of tl={tl}")
@@ -38,4 +41,5 @@ class PallasEngine(CnfEngine):
         from repro.kernels.fused_cnf_join import ops as cnf_ops
         yield from cnf_ops.evaluate_corpus_stream(
             feats, clauses, thetas, tl=self.tl, tr=self.tr,
-            l_block=self.l_block, interpret=self.interpret)
+            l_block=self.l_block, interpret=self.interpret,
+            early_reject=self.early_reject)

@@ -30,19 +30,37 @@ Layout (see DESIGN.md §3):
     interconnect carries candidate counts, never feature planes or
     masks (asserted on the (2, 16, 16) dry-run via
     ``distributed.hlo_analysis.pod_crossing_stats``);
-  * the band loop is **double buffered**: step k+1 is dispatched (JAX
-    async dispatch — no host sync) *before* the host pulls step k's
-    counts, bases and candidate shards, so the next band's kernel runs
-    while the host filters padding, sorts, and the consumer holds the
-    previous chunk.  Per chunk the host pulls one int32 count plus one
-    int32 global base per device and the first ``count`` buffer rows
+  * the band loop runs a **depth-k prefetch ring** (``prefetch_depth``,
+    default 2 ≡ the PR-5 double buffer): up to ``k`` band steps are
+    dispatched (JAX async dispatch — no host sync) before the host
+    blocks pulling the oldest step's counts, bases and candidate shards,
+    so successor bands' kernels run while the host filters padding,
+    sorts, and the consumer holds the previous chunk — deeper rings
+    ride out slower/burstier host pulls.  Per chunk the host pulls one
+    int32 count, one int32 global base and one int32 conjunct-eval
+    counter per device plus the first ``count`` buffer rows
     (``jax.device_get``): O(candidates) transfer total, and the first
     candidates surface after one scan step.  Batch ``evaluate`` is a
-    drain of this same stream.  ``double_buffer=False`` forces the serial
-    loop (the benchmark A/B control).  Overlap is accounted, not assumed:
-    per-chunk ``dispatch_wall_s`` / ``pull_wall_s`` and an ``overlap_s``
-    that is exactly 0 when the loop degrades to serial
-    (``benchmarks/run.py`` gates it against the committed baselines).
+    drain of this same stream.  ``prefetch_depth=1`` (≡ the legacy
+    ``double_buffer=False``) is the serial A/B control — the ring holds
+    nothing while the host pulls or the consumer holds, so its
+    ``overlap_s`` is exactly 0 *and* every dispatch wall lands in its
+    own chunk's ``dispatch_wall_s`` (no post-yield tail dispatch
+    leaking into the consumer's hold window).  Overlap is accounted,
+    not assumed: per-chunk ``dispatch_wall_s`` / ``pull_wall_s`` and an
+    ``overlap_s`` that is exactly 0 when the loop degrades to serial
+    (``benchmarks/run.py`` gates it against the committed baselines);
+  * CNF evaluation **short-circuits** (``early_reject``, default on):
+    the kernel evaluates the first conjunct unconditionally and runs
+    the rest only where the first passed somewhere in the tile — a band
+    whose first-conjunct popcount is zero costs 1 clause, not C (the
+    jnp reference path makes the same skip per sub-band via
+    ``lax.cond``).  The candidate set is identical either way; the work
+    actually done is pulled per step as an int32 eval counter and
+    surfaced as ``EngineStats.conjunct_evals``, so the win is measured,
+    never assumed.  Conjunct *ordering* (most selective first, measured
+    on the plan's threshold sample) happens upstream in core.join —
+    the engine evaluates whatever clause order it is handed.
 
 Each step is L-complete (all shards' row blocks × one band per pod), so
 steps partition the candidate set — disjoint by construction, sorted
@@ -51,8 +69,9 @@ within the chunk by ``base.evaluate_stream``.
 Capacity is bounded-and-retried, never silently truncated: the on-device
 count keeps growing past the buffer; overflow is detected per (pod,
 data, model) shard and the host reruns *that step* — invalidating and
-re-dispatching the in-flight step k+1 at the grown capacity, so a retry
-can never emit a chunk computed at a stale buffer size.  Capacities are
+re-dispatching **all** in-flight successor steps at the grown capacity,
+so a retry can never emit a chunk computed at a stale buffer size no
+matter how deep the ring was.  Capacities are
 carried **per shard** across the steps of one sweep (``extract.
 grow_caps``: only the overflowing shard grows ≥4×; the uniform SPMD
 dispatch buffer is the per-shard max), and they are *sweep-local*: a
@@ -76,6 +95,7 @@ lowers onto the (16, 16) / (2, 16, 16) production meshes from
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
 from typing import Optional
@@ -94,12 +114,13 @@ from repro.engine.base import ChunkDelta, CnfEngine
 
 @dataclasses.dataclass
 class _InFlight:
-    """One dispatched-but-unpulled band step of the double-buffered loop."""
+    """One dispatched-but-unpulled band step of the prefetch ring."""
     k: int                             # host step index
     cap: int                           # per-device buffer rows it was built at
     buf: object                        # device arrays (futures until pulled)
     cnt: object
     base: object
+    evals: object                      # per-device int32 conjunct-eval units
 
 
 _HOST_MESH = None                      # shared default mesh: stable cache key
@@ -130,7 +151,9 @@ class ShardedEngine(CnfEngine):
     def __init__(self, mesh=None, *, tl: int = 128, tr: int = 128,
                  r_chunk: Optional[int] = None, capacity: Optional[int] = None,
                  interpret: Optional[bool] = None, use_kernel: bool = True,
-                 double_buffer: bool = True):
+                 double_buffer: bool = True,
+                 prefetch_depth: Optional[int] = None,
+                 early_reject: bool = True):
         """mesh: any mesh with a "data" axis and optional "pod" / "model"
         axes.  When None, the mesh is resolved *per evaluation* — the
         plane set's attached mesh, else make_host_mesh() — so one engine
@@ -143,8 +166,12 @@ class ShardedEngine(CnfEngine):
         use_kernel=False swaps the Pallas kernel for the jnp reference —
         identical math, faster under CPU emulation (and the default-
         sensible choice for many-device dry-run meshes).
-        double_buffer=False forces the serial band loop (A/B control for
-        the pipeline benchmark)."""
+        prefetch_depth: how many band steps may be in flight at once
+        (the ring; default 2 ≡ the classic double buffer, 1 = serial).
+        double_buffer=False is the legacy spelling of prefetch_depth=1
+        (an explicit prefetch_depth wins).  early_reject=False disables
+        the conjunct short-circuit — full-width CNF on every band, the
+        A/B control the conjunct_evals gate compares against."""
         if tr % 32 != 0:
             raise ValueError(f"tr={tr} must be a multiple of 32 (packed mask)")
         self.mesh = mesh
@@ -160,10 +187,23 @@ class ShardedEngine(CnfEngine):
         self.interpret = interpret
         self.use_kernel = use_kernel
         self.double_buffer = bool(double_buffer)
+        if prefetch_depth is not None and int(prefetch_depth) < 1:
+            raise ValueError(
+                f"prefetch_depth={prefetch_depth} must be >= 1 (1 = serial)")
+        self.prefetch_depth = int(prefetch_depth) if prefetch_depth else None
+        self.early_reject = bool(early_reject)
         # diagnostics only (tests, the dry-run report): the per-shard
         # capacities the most recent sweep ended at.  Not config — the
         # next evaluation starts from ``self.capacity`` again.
         self.last_sweep_caps: Optional[np.ndarray] = None
+
+    @property
+    def effective_prefetch_depth(self) -> int:
+        """The ring depth evaluations run at: an explicit ``prefetch_depth``
+        wins; otherwise 2 (double buffer) or 1 (``double_buffer=False``)."""
+        if self.prefetch_depth is not None:
+            return self.prefetch_depth
+        return 2 if self.double_buffer else 1
 
     @property
     def last_sweep_capacity(self) -> int:
@@ -203,9 +243,15 @@ class ShardedEngine(CnfEngine):
         if interpret is None:
             interpret = jax.default_backend() == "cpu"
         key = (mesh, kclauses, thetas, rows_shard, cap, r_chunk, n_chunks,
-               self.tl, self.tr, self.use_kernel, interpret)
+               self.tl, self.tr, self.use_kernel, interpret,
+               self.early_reject)
         cached = ShardedEngine._programs.get(key)
         if cached is not None:
+            # LRU, not FIFO: re-insert on hit so eviction tracks recency —
+            # a hot serving program must survive any number of one-off
+            # joins churning the other slots (dict preserves insert order)
+            ShardedEngine._programs.pop(key)
+            ShardedEngine._programs[key] = cached
             return cached
         fn = self._build_uncached(mesh, kclauses, thetas, rows_shard, cap,
                                   r_chunk, n_chunks, interpret)
@@ -220,6 +266,7 @@ class ShardedEngine(CnfEngine):
         from repro.kernels.fused_cnf_join.kernel import cnf_join_block
         tl, tr = self.tl, self.tr
         use_kernel = self.use_kernel
+        early_reject = self.early_reject
         l_axes, n_pods, n_data, n_model = _mesh_geometry(mesh)
         has_pod = len(l_axes) == 2
         has_model = "model" in mesh.axis_names
@@ -238,13 +285,24 @@ class ShardedEngine(CnfEngine):
             col0 = band * r_chunk + model * r_sub
             erk = lax.dynamic_slice_in_dim(emb_r, col0, r_sub, axis=1)
             srk = lax.dynamic_slice_in_dim(scal_r, col0, r_sub, axis=1)
+            # evals: conjunct-eval units this device really computed —
+            # kernel path: clauses per tile, summed over the tile grid
+            # (unit = tl*tr pairs); ref path: clauses for the whole
+            # sub-band (unit = rows_shard*r_sub pairs).  Device-local
+            # (no collective): the host pulls one int32 per device,
+            # alongside the counts, and converts units to pair-clause
+            # evals.
             if use_kernel:
-                packed = cnf_join_block(emb_l, erk, scal_l, srk, kclauses,
-                                        thetas, tl=tl, tr=tr,
-                                        interpret=interpret)
+                packed, evals_grid = cnf_join_block(
+                    emb_l, erk, scal_l, srk, kclauses, thetas, tl=tl, tr=tr,
+                    interpret=interpret, early_reject=early_reject,
+                    with_evals=True)
+                evals = jnp.sum(evals_grid, dtype=jnp.int32)
             else:
-                packed = cref.pack_mask(cref.cnf_join_ref(
-                    emb_l, erk, scal_l, srk, kclauses, thetas))
+                ok, evals = cref.cnf_join_ref_counted(
+                    emb_l, erk, scal_l, srk, kclauses, thetas,
+                    early_reject=early_reject)
+                packed = cref.pack_mask(ok)
             buf, cnt = extract.extract_pairs(packed, capacity=cap,
                                              row_offset=row0,
                                              col_offset=col0)
@@ -252,7 +310,7 @@ class ShardedEngine(CnfEngine):
                 cnt, inner_axes=inner_axes,
                 inner_index=data * n_model + model,
                 pod_axis="pod" if has_pod else None)
-            return buf, cnt[None], base[None]
+            return buf, cnt[None], base[None], evals[None]
 
         row_spec = l_axes[0] if len(l_axes) == 1 else l_axes
         dev_axes = l_axes + (("model",) if has_model else ())
@@ -260,7 +318,8 @@ class ShardedEngine(CnfEngine):
             body, mesh=mesh,
             in_specs=(P(None, row_spec, None), P(None, None, None),
                       P(None, row_spec), P(None, None), P()),
-            out_specs=(P(dev_axes, None), P(dev_axes), P(dev_axes)),
+            out_specs=(P(dev_axes, None), P(dev_axes), P(dev_axes),
+                       P(dev_axes)),
             check_rep=False)   # pallas_call has no replication rule
         return jax.jit(fn)
 
@@ -307,47 +366,72 @@ class ShardedEngine(CnfEngine):
         caps = np.full(n_dev, self.capacity or max(4096, 4 * rows_shard),
                        np.int64)
         timing = {"dispatch": 0.0}
+        # host conversion factor from device eval *units* to (pair,
+        # clause) evaluations: the kernel counts per tile, the jnp
+        # reference per whole sub-band (see body)
+        unit_pairs = (self.tl * self.tr if self.use_kernel
+                      else rows_shard * (r_chunk // n_model))
 
-        def dispatch(k) -> Optional[_InFlight]:
+        def dispatch(k) -> _InFlight:
             """Enqueue band step k at the current uniform capacity (JAX
             async dispatch: returns futures, no host sync)."""
-            if k >= n_chunks:
-                return None
             cap = int(caps.max())
             t0 = time.perf_counter()
             fn = self._build(mesh, kclauses, thetas, rows_shard, cap,
                              r_chunk, n_chunks)
-            buf, cnt, base = fn(*args, jnp.int32(k))
+            buf, cnt, base, evals = fn(*args, jnp.int32(k))
             timing["dispatch"] += time.perf_counter() - t0
-            return _InFlight(k, cap, buf, cnt, base)
+            return _InFlight(k, cap, buf, cnt, base, evals)
 
-        step = dispatch(0)
+        def pull_counts(step):
+            """Block on step's counts + eval units; returns (counts,
+            pair-clause evals, bytes pulled)."""
+            counts = np.asarray(jax.device_get(step.cnt))
+            ev = np.asarray(jax.device_get(step.evals))
+            return counts, int(ev.sum()) * unit_pairs, counts.nbytes + ev.nbytes
+
+        depth = self.effective_prefetch_depth
+        ring: collections.deque = collections.deque()   # oldest first
+        next_k = 0
         hold_overlap = 0.0             # consumer hold with a step in flight
-        while step is not None:
+        while ring or next_k < n_chunks:
+            # keep up to `depth` steps in flight: refill BEFORE blocking on
+            # the oldest step's pull, so successor bands compute while the
+            # host pulls/filters and the consumer holds the chunk.  At
+            # depth 1 this is the serial loop — the ring is empty during
+            # the pull and the hold, and each step's dispatch wall lands
+            # in its own chunk (no post-yield tail dispatch).
+            while len(ring) < depth and next_k < n_chunks:
+                ring.append(dispatch(next_k))
+                next_k += 1
+            step = ring.popleft()
             k = step.k
-            # double buffering: enqueue step k+1 BEFORE blocking on step
-            # k's pull, so the next band computes while the host filters,
-            # sorts and the consumer holds this chunk
-            nxt = dispatch(k + 1) if self.double_buffer else None
             t_pull0 = time.perf_counter()
             bytes_to_host = 0
-            counts = np.asarray(jax.device_get(step.cnt))
-            bytes_to_host += counts.nbytes
+            conjunct_evals = 0         # includes retry attempts: real work
+            counts, ev, nb = pull_counts(step)
+            conjunct_evals += ev
+            bytes_to_host += nb
             while (counts > step.cap).any():
                 # overflow: grow only the overflowing shards (>=4x each,
                 # extract.grow_caps); counts are exact true totals, so the
                 # retried step — dispatched at the new per-shard max —
-                # cannot overflow again.  The in-flight step k+1 was built
-                # at the stale capacity: invalidate it (drop the futures)
-                # and re-dispatch it right after the retry so the pipeline
-                # stays full and no chunk is ever emitted at a stale size.
+                # cannot overflow again.  Every in-flight successor in the
+                # ring was built at the stale capacity: invalidate them
+                # all (drop the futures) and re-dispatch them right after
+                # the retry, in order, so the pipeline stays full and no
+                # chunk is ever emitted at a stale size.
                 caps[:] = extract.grow_caps(caps, counts)
                 t_retry0 = time.perf_counter()
+                successors = [s.k for s in ring]
+                ring.clear()
                 step = dispatch(k)
-                nxt = dispatch(k + 1) if self.double_buffer else None
+                for kk in successors:
+                    ring.append(dispatch(kk))
                 t_pull0 += time.perf_counter() - t_retry0   # it's dispatch,
-                counts = np.asarray(jax.device_get(step.cnt))  # not pull
-                bytes_to_host += counts.nbytes
+                counts, ev, nb = pull_counts(step)          # not pull
+                conjunct_evals += ev
+                bytes_to_host += nb
             cap = step.cap
             bases = np.asarray(jax.device_get(step.base))
             bytes_to_host += bases.nbytes
@@ -386,16 +470,15 @@ class ShardedEngine(CnfEngine):
             # overlap accounting: host work done while a successor step was
             # in flight on the device — this pull/filter window, plus the
             # time the consumer held the previous chunk.  Exactly 0 for the
-            # serial loop, so a pipeline that silently degrades to serial
-            # is visible in EngineStats (and gated in benchmarks/run.py).
-            overlap_s = (pull_s if nxt is not None else 0.0) + hold_overlap
+            # depth-1 (serial) ring, so a pipeline that silently degrades
+            # to serial is visible in EngineStats (and gated in
+            # benchmarks/run.py).
+            overlap_s = (pull_s if ring else 0.0) + hold_overlap
             t_yield = time.perf_counter()
             yield ChunkDelta(pairs, bytes_to_host, chunk_h2d, chunk_reshard,
                              dispatch_s=dispatch_s, pull_s=pull_s,
-                             overlap_s=overlap_s)
+                             overlap_s=overlap_s,
+                             conjunct_evals=conjunct_evals)
             hold = time.perf_counter() - t_yield
-            hold_overlap = hold if nxt is not None else 0.0
-            if nxt is None:            # serial mode (or a just-grown retry
-                nxt = dispatch(k + 1)  # tail): enqueue only after the emit
-            step = nxt
+            hold_overlap = hold if ring else 0.0
         self.last_sweep_caps = caps.copy()

@@ -16,7 +16,21 @@ pass:
 
 The clause structure and thresholds are *compile-time constants* (closed
 over), so the kernel body unrolls into a static sequence of matmuls +
-vector ops — no interpreter-visible control flow.
+vector ops — the only data-dependent control flow is the optional
+``early_reject`` tile skip below.
+
+``early_reject=True`` short-circuits the conjunction: the first clause is
+evaluated unconditionally, and the remaining clauses run under a
+``pl.when`` predicated on the first clause passing *somewhere* in the
+tile.  A tile (and hence a whole band, when every tile of the band is
+dead) whose first-conjunct popcount is zero writes a zero mask without
+touching the later clauses' planes.  The candidate set is identical
+either way — skipped work can only be ANDed against an all-false mask.
+
+``with_evals=True`` adds a second (grid_l, grid_r) int32 output counting
+the clauses actually evaluated per tile (1 when the tile was rejected
+early, len(clauses) otherwise), so hosts can charge conjunct FLOPs
+honestly instead of assuming the short-circuit saved anything.
 
 VMEM budget per grid step (TL=256, TR=512, D=128, F=6):
   emb_l  F*TL*D*4  = 768 KiB     emb_r  F*TR*D*4 = 1.5 MiB
@@ -35,43 +49,100 @@ from jax.experimental import pallas as pl
 VEC, SCAL = 0, 1
 
 
-def _cnf_kernel(emb_l_ref, emb_r_ref, scal_l_ref, scal_r_ref, out_ref, *,
-                clauses, thetas, tl, tr):
-    """clauses: tuple of clauses, each a tuple of (kind, idx); thetas: floats."""
-    ok = None
-    for ci, members in enumerate(clauses):
-        dmin = None
-        for kind, fi in members:
-            if kind == VEC:
-                a = emb_l_ref[fi, :, :]                       # (TL, D)
-                b = emb_r_ref[fi, :, :]                       # (TR, D)
-                dot = jax.lax.dot_general(
-                    a, b, (((1,), (1,)), ((), ())),
-                    preferred_element_type=jnp.float32)       # (TL, TR) MXU
-                d = jnp.clip(0.5 - 0.5 * dot, 0.0, 1.0)
-            else:
-                x = scal_l_ref[fi, :]                         # (TL,)
-                y = scal_r_ref[fi, :]                         # (TR,)
-                d = jnp.clip(jnp.abs(x[:, None] - y[None, :]), 0.0, 1.0)
-            dmin = d if dmin is None else jnp.minimum(dmin, d)
-        pas = dmin <= thetas[ci]
-        ok = pas if ok is None else jnp.logical_and(ok, pas)
-    # pack 32 R-neighbours per uint32 word
+def _clause_min_dist(emb_l_ref, emb_r_ref, scal_l_ref, scal_r_ref, members):
+    """min over a clause's member features of the (TL, TR) distance plane."""
+    dmin = None
+    for kind, fi in members:
+        if kind == VEC:
+            a = emb_l_ref[fi, :, :]                       # (TL, D)
+            b = emb_r_ref[fi, :, :]                       # (TR, D)
+            dot = jax.lax.dot_general(
+                a, b, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32)       # (TL, TR) MXU
+            d = jnp.clip(0.5 - 0.5 * dot, 0.0, 1.0)
+        else:
+            x = scal_l_ref[fi, :]                         # (TL,)
+            y = scal_r_ref[fi, :]                         # (TR,)
+            d = jnp.clip(jnp.abs(x[:, None] - y[None, :]), 0.0, 1.0)
+        dmin = d if dmin is None else jnp.minimum(dmin, d)
+    return dmin
+
+
+def _pack_tile(ok, tl, tr):
+    """Pack a boolean (TL, TR) tile to uint32 words (32 R-neighbours each)."""
     okw = ok.reshape(tl, tr // 32, 32).astype(jnp.uint32)
     weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
-    out_ref[:, :] = jnp.sum(okw * weights[None, None, :], axis=-1,
-                            dtype=jnp.uint32)
+    return jnp.sum(okw * weights[None, None, :], axis=-1, dtype=jnp.uint32)
+
+
+def _cnf_body(emb_l_ref, emb_r_ref, scal_l_ref, scal_r_ref, out_ref,
+              evals_ref, *, clauses, thetas, tl, tr, early_reject):
+    n_c = len(clauses)
+
+    def pass_matrix(ci):
+        dmin = _clause_min_dist(emb_l_ref, emb_r_ref, scal_l_ref, scal_r_ref,
+                                clauses[ci])
+        return dmin <= thetas[ci]
+
+    def full(ok0=None):
+        ok = ok0
+        for ci in range(0 if ok0 is None else 1, n_c):
+            pas = pass_matrix(ci)
+            ok = pas if ok is None else jnp.logical_and(ok, pas)
+        out_ref[:, :] = _pack_tile(ok, tl, tr)
+        if evals_ref is not None:
+            evals_ref[0, 0] = jnp.int32(n_c)
+
+    if not early_reject or n_c < 2:
+        full()
+        return
+
+    ok0 = pass_matrix(0)
+    live = jnp.any(ok0)
+
+    @pl.when(live)
+    def _():
+        full(ok0)
+
+    @pl.when(jnp.logical_not(live))
+    def _():
+        out_ref[:, :] = jnp.zeros((tl, tr // 32), jnp.uint32)
+        if evals_ref is not None:
+            evals_ref[0, 0] = jnp.int32(1)
+
+
+def _cnf_kernel(emb_l_ref, emb_r_ref, scal_l_ref, scal_r_ref, out_ref, *,
+                clauses, thetas, tl, tr, early_reject=False):
+    """clauses: tuple of clauses, each a tuple of (kind, idx); thetas: floats."""
+    _cnf_body(emb_l_ref, emb_r_ref, scal_l_ref, scal_r_ref, out_ref, None,
+              clauses=clauses, thetas=thetas, tl=tl, tr=tr,
+              early_reject=early_reject)
+
+
+def _cnf_kernel_evals(emb_l_ref, emb_r_ref, scal_l_ref, scal_r_ref, out_ref,
+                      evals_ref, *, clauses, thetas, tl, tr,
+                      early_reject=False):
+    _cnf_body(emb_l_ref, emb_r_ref, scal_l_ref, scal_r_ref, out_ref,
+              evals_ref, clauses=clauses, thetas=thetas, tl=tl, tr=tr,
+              early_reject=early_reject)
 
 
 def cnf_join_block(emb_l, emb_r, scal_l, scal_r, clauses, thetas, *,
-                   tl: int = 256, tr: int = 512, interpret: bool = False):
+                   tl: int = 256, tr: int = 512, interpret: bool = False,
+                   early_reject: bool = False, with_evals: bool = False):
     """Launch the fused kernel over the full (n_l x n_r) plane.
 
     emb_l: (F_v, n_l, D) f32   emb_r: (F_v, n_r, D) f32
     scal_l: (F_s, n_l) f32     scal_r: (F_s, n_r) f32
     clauses: static structure (tuple of tuples of (kind, idx))
     thetas: tuple of python floats (compile-time constants)
-    Returns packed uint32 mask (n_l, n_r // 32).
+    early_reject: predicate later clauses on the first clause passing
+        somewhere in the tile (candidate set unchanged; see module doc)
+    with_evals: also return a (n_l//tl, n_r//tr) int32 grid of clauses
+        evaluated per tile
+
+    Returns packed uint32 mask (n_l, n_r // 32); with ``with_evals`` a
+    ``(mask, evals_grid)`` pair.
     """
     fv, n_l, d = emb_l.shape
     n_r = emb_r.shape[1]
@@ -85,18 +156,38 @@ def cnf_join_block(emb_l, emb_r, scal_l, scal_r, clauses, thetas, *,
             f"(n_l={n_l}, n_r={n_r}) must be multiples of tiles "
             f"(tl={tl}, tr={tr}); pad via ops.pack_features")
     grid = (n_l // tl, n_r // tr)
+    in_specs = [
+        pl.BlockSpec((fv, tl, d), lambda i, j: (0, i, 0)),
+        pl.BlockSpec((fv, tr, d), lambda i, j: (0, j, 0)),
+        pl.BlockSpec((max(scal_l.shape[0], 1), tl), lambda i, j: (0, i)),
+        pl.BlockSpec((max(scal_r.shape[0], 1), tr), lambda i, j: (0, j)),
+    ]
+    if with_evals:
+        kernel = functools.partial(
+            _cnf_kernel_evals, clauses=tuple(clauses),
+            thetas=tuple(float(t) for t in thetas), tl=tl, tr=tr,
+            early_reject=early_reject)
+        return pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=[
+                pl.BlockSpec((tl, tr // 32), lambda i, j: (i, j)),
+                pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+            ],
+            out_shape=[
+                jax.ShapeDtypeStruct((n_l, n_r // 32), jnp.uint32),
+                jax.ShapeDtypeStruct(grid, jnp.int32),
+            ],
+            interpret=interpret,
+        )(emb_l, emb_r, scal_l, scal_r)
     kernel = functools.partial(_cnf_kernel, clauses=tuple(clauses),
                                thetas=tuple(float(t) for t in thetas),
-                               tl=tl, tr=tr)
+                               tl=tl, tr=tr, early_reject=early_reject)
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((fv, tl, d), lambda i, j: (0, i, 0)),
-            pl.BlockSpec((fv, tr, d), lambda i, j: (0, j, 0)),
-            pl.BlockSpec((max(scal_l.shape[0], 1), tl), lambda i, j: (0, i)),
-            pl.BlockSpec((max(scal_r.shape[0], 1), tr), lambda i, j: (0, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((tl, tr // 32), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((n_l, n_r // 32), jnp.uint32),
         interpret=interpret,

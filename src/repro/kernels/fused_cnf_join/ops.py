@@ -278,11 +278,11 @@ def evaluate_corpus(feats: Sequence, clauses: Sequence, thetas,
     """
     pairs: list = []
     mask_bytes = 0
-    for block_pairs, nbytes, _, _ in evaluate_corpus_stream(
+    for delta in evaluate_corpus_stream(
             feats, clauses, thetas, tl=tl, tr=tr, l_block=None,
             interpret=interpret):
-        pairs.extend(block_pairs)
-        mask_bytes += nbytes
+        pairs.extend(delta.pairs)
+        mask_bytes += delta.bytes_to_host
     if return_mask_bytes:
         return pairs, mask_bytes
     return pairs
@@ -290,9 +290,10 @@ def evaluate_corpus(feats: Sequence, clauses: Sequence, thetas,
 
 def evaluate_corpus_stream(feats: Sequence, clauses: Sequence, thetas,
                            *, tl: int = 256, tr: int = 512,
-                           l_block=None, interpret=None):
-    """Streaming corpus driver: yields (pairs, mask_bytes, h2d_bytes,
-    reshard_bytes) per L-row block.
+                           l_block=None, interpret=None,
+                           early_reject: bool = True):
+    """Streaming corpus driver: yields an ``engine.base.ChunkDelta`` per
+    L-row block.
 
     Features are staged once (host pack + upload, or assembled from
     device-resident planes with zero H2D — see ``stage_planes``); the
@@ -301,8 +302,12 @@ def evaluate_corpus_stream(feats: Sequence, clauses: Sequence, thetas,
     Each strip's packed mask is pulled and unpacked immediately, so
     candidates for early rows reach the consumer while later strips are
     still on the device.  The one-time plane upload is attributed to the
-    first emitted block.
+    first emitted block.  ``early_reject`` enables the kernel's tile-level
+    conjunct short-circuit; either way the per-tile eval counts are
+    pulled with the mask and charged to the chunk (``conjunct_evals``,
+    in pair-clause units over padded tiles — honest device work).
     """
+    from repro.engine.base import ChunkDelta
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     staged = stage_planes(feats, clauses, tl=tl, tr=tr)
@@ -317,12 +322,17 @@ def evaluate_corpus_stream(feats: Sequence, clauses: Sequence, thetas,
     thetas = tuple(float(t) for t in thetas)
     for i0 in range(0, pl_n, l_block):
         rows = min(l_block, pl_n - i0)
-        packed = cnf_join_block(
+        packed, evals_grid = cnf_join_block(
             lax.slice_in_dim(demb_l, i0, i0 + rows, axis=1), demb_r,
             lax.slice_in_dim(dscal_l, i0, i0 + rows, axis=1), dscal_r,
-            kclauses, thetas, tl=tl, tr=tr, interpret=interpret)
+            kclauses, thetas, tl=tl, tr=tr, interpret=interpret,
+            early_reject=early_reject, with_evals=True)
         host_mask = np.asarray(packed)              # O(rows * n_r / 8) pull
+        evals_host = np.asarray(evals_grid)         # one int32 per tile
         ok = ref.unpack_mask(host_mask, pr_n)[: max(n_l - i0, 0), :n_r]
         ii, jj = np.nonzero(ok)
-        yield (list(zip((ii + i0).tolist(), jj.tolist())), host_mask.nbytes,
-               h2d if i0 == 0 else 0, 0)
+        yield ChunkDelta(
+            list(zip((ii + i0).tolist(), jj.tolist())),
+            bytes_to_host=host_mask.nbytes + evals_host.nbytes,
+            bytes_h2d=h2d if i0 == 0 else 0,
+            conjunct_evals=int(evals_host.sum()) * tl * tr)

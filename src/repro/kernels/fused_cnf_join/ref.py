@@ -7,27 +7,64 @@ and compared — what a straightforward XLA program would do.
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.kernels.fused_cnf_join.kernel import VEC
+
+
+def _clause_pass(emb_l, emb_r, scal_l, scal_r, members, theta) -> jnp.ndarray:
+    dmin = None
+    for kind, fi in members:
+        if kind == VEC:
+            dot = jnp.einsum("ld,rd->lr", emb_l[fi], emb_r[fi])
+            d = jnp.clip(0.5 - 0.5 * dot, 0.0, 1.0)
+        else:
+            d = jnp.clip(jnp.abs(scal_l[fi][:, None] - scal_r[fi][None, :]),
+                         0.0, 1.0)
+        dmin = d if dmin is None else jnp.minimum(dmin, d)
+    return dmin <= theta
 
 
 def cnf_join_ref(emb_l, emb_r, scal_l, scal_r, clauses, thetas) -> jnp.ndarray:
     """Returns the boolean match matrix (n_l, n_r)."""
     ok = None
     for ci, members in enumerate(clauses):
-        dmin = None
-        for kind, fi in members:
-            if kind == VEC:
-                dot = jnp.einsum("ld,rd->lr", emb_l[fi], emb_r[fi])
-                d = jnp.clip(0.5 - 0.5 * dot, 0.0, 1.0)
-            else:
-                d = jnp.clip(jnp.abs(scal_l[fi][:, None] - scal_r[fi][None, :]),
-                             0.0, 1.0)
-            dmin = d if dmin is None else jnp.minimum(dmin, d)
-        pas = dmin <= thetas[ci]
+        pas = _clause_pass(emb_l, emb_r, scal_l, scal_r, members, thetas[ci])
         ok = pas if ok is None else ok & pas
     return ok
+
+
+def cnf_join_ref_counted(emb_l, emb_r, scal_l, scal_r, clauses, thetas, *,
+                         early_reject: bool = True):
+    """``cnf_join_ref`` with the band-level short-circuit and an honest
+    conjunct-eval count.
+
+    Returns ``(ok, evals_units)`` where ``evals_units`` is an int32 scalar:
+    the number of clauses whose distance plane was actually computed for
+    this band.  With ``early_reject`` and >= 2 clauses the remaining
+    clauses run under a ``lax.cond`` on the first clause passing anywhere —
+    a dead band returns an all-false mask at cost 1 clause.  The candidate
+    set is identical either way (skipped planes could only AND against an
+    all-false mask).
+    """
+    n_c = len(clauses)
+    ok0 = _clause_pass(emb_l, emb_r, scal_l, scal_r, clauses[0], thetas[0])
+
+    def rest(ok0):
+        ok = ok0
+        for ci in range(1, n_c):
+            ok = ok & _clause_pass(emb_l, emb_r, scal_l, scal_r,
+                                   clauses[ci], thetas[ci])
+        return ok, jnp.int32(n_c)
+
+    if not early_reject or n_c < 2:
+        return rest(ok0)
+
+    def skip(ok0):
+        return jnp.zeros_like(ok0), jnp.int32(1)
+
+    return jax.lax.cond(jnp.any(ok0), rest, skip, ok0)
 
 
 def pack_mask(ok: jnp.ndarray) -> jnp.ndarray:

@@ -88,7 +88,10 @@ def _check_parity(mesh, rep: dict, *, tl, tr, r_chunk, use_kernel) -> None:
     specs, clauses, thetas = representative_cnf(ds)
     feats = SimulatedExtractor(ds).materialize(specs, CostLedger())
     oracle = get_engine("numpy", block=256).evaluate(feats, clauses, thetas)
-    eng = get_engine("sharded", **_engine_opts(
+    # prefetch_depth=4: the deep ring must change neither the candidate
+    # set nor the counts-only pod-crossing profile (the hlo check compiles
+    # the same per-step program the ring dispatches)
+    eng = get_engine("sharded", prefetch_depth=4, **_engine_opts(
         mesh, tl=tl, tr=tr, r_chunk=r_chunk, use_kernel=use_kernel))
     res = eng.evaluate(feats, clauses, thetas)
     assert res.candidates == oracle.candidates, (
@@ -104,21 +107,25 @@ def _check_parity(mesh, rep: dict, *, tl, tr, r_chunk, use_kernel) -> None:
         "dispatch_wall_s": round(s.dispatch_wall_s, 4),
         "pull_wall_s": round(s.pull_wall_s, 4),
         "overlap_s": round(s.overlap_s, 4),
+        "prefetch_depth": eng.effective_prefetch_depth,
+        "conjunct_evals": s.conjunct_evals,
+        "flops_per_candidate": round(s.flops_per_candidate, 2),
     }
     # the R sweep takes >= 2 steps here (corpus sized for it), so the
-    # double-buffered band loop must have kept a successor step in flight
-    # during host pulls: overlap_s == 0 means it degraded to serial
+    # prefetch ring must have kept a successor step in flight during host
+    # pulls: overlap_s == 0 means it degraded to serial
     assert s.overlap_s > 0, (
-        "double-buffered band loop reported zero overlap on a multi-step "
+        "depth-4 prefetch ring reported zero overlap on a multi-step "
         "sweep — the pipeline degraded to the serial loop")
+    assert s.conjunct_evals > 0, "conjunct-eval accounting missing"
     # host traffic must scale with candidates (8 B per pulled pair, plus
-    # one count + one base int32 per device per step), never with the
-    # O(n_l*n_r) plane
+    # one count + one base + one conjunct-eval int32 per device per
+    # step), never with the O(n_l*n_r) plane
     n_dev = 1
     for v in mesh.shape.values():
         n_dev *= v
     n_steps = math.ceil(s.n_r / r_chunk)
-    allow = 8 * s.n_candidates + 8 * n_dev * n_steps + 1024
+    allow = 8 * s.n_candidates + 12 * n_dev * n_steps + 1024
     assert s.bytes_to_host <= allow, (
         f"host traffic {s.bytes_to_host} not O(candidates) (allow {allow})")
 

@@ -68,8 +68,9 @@ from repro.core.adj_target import adj_target
 from repro.core.costs import CostLedger
 from repro.core.featurize import distance_stack, vectorize
 from repro.core.join import (FDJConfig, JoinPlan, JoinResult, _get_engine,
-                             execute_join, make_label_fn, plan_join)
-from repro.core.scaffold import min_fpr_thresholds
+                             apply_conjunct_order, execute_join,
+                             make_label_fn, plan_join)
+from repro.core.scaffold import min_fpr_thresholds, ordered_conjuncts
 from repro.core.refine import RefinementPump
 from repro.serving.planes import (FeaturePlaneStore,
                                   corpus_fingerprint)
@@ -426,6 +427,11 @@ class JoinService:
         plan.theta = thr.theta
         plan.t_prime = adj.t_prime
         plan.feasible = thr.feasible
+        # new thresholds move per-conjunct pass rates: refresh the cached
+        # plan's evaluation order from the same reservoir distances (free —
+        # cd is already in hand; candidate set invariant either way)
+        plan.conjunct_order = ordered_conjuncts(cd, thr.theta,
+                                                plan.sc_local.clauses)
         self._evals.pop(key, None)          # candidates predate the swap
         qledger.record_recalibration(swapped=True, drift=drift,
                                      dollars=dollars)
@@ -466,6 +472,12 @@ class JoinService:
                 return None          # normalization shifted: delta inexact
             sub = planes.slice_r(off)
             eng = _get_engine(cfg)
+            # the delta join evaluates under the cached plan's measured
+            # conjunct order — same permutation the full evaluation used,
+            # so the merge stays bit-exact (order never changes the set)
+            d_clauses, d_theta = apply_conjunct_order(
+                plan.sc_local.clauses, plan.theta,
+                plan.conjunct_order if cfg.order_conjuncts else None)
             if cfg.stream_refinement:
                 def shifted(chunks):
                     for ch in chunks:
@@ -481,12 +493,12 @@ class JoinService:
                                       batch_pairs=cfg.refine_batch_pairs,
                                       max_queue_chunks=cfg.pump_queue_chunks)
                 pr = pump.run(shifted(eng.evaluate_stream(
-                    sub, plan.sc_local.clauses, plan.theta)), ledger=qledger)
+                    sub, d_clauses, d_theta)), ledger=qledger)
                 delta_cands = pr.candidates
                 accepted = pr.pairs
                 engine_stats = pr.engine_stats
             else:
-                res = eng.evaluate(sub, plan.sc_local.clauses, plan.theta)
+                res = eng.evaluate(sub, d_clauses, d_theta)
                 delta_cands = [(i, j + off) for (i, j) in res.candidates]
                 engine_stats = res.stats
                 t0 = time.perf_counter()

@@ -82,6 +82,62 @@ def test_pump_worker_failure_propagates():
         pump.run(iter(_chunks([[(0, 0), (0, 1)], [(1, 0)], [(2, 0)]])))
 
 
+def test_pump_worker_failure_counts_dropped_chunks():
+    """A dead worker's failure handler keeps draining the queue (so the
+    producer's blocking put can never hang on a full queue) and counts
+    every chunk it throws away instead of discarding it silently."""
+    all_put = threading.Event()
+
+    def refine(batch):
+        # die only after the producer has queued everything: the handler
+        # must then drain a deterministic 5 chunks in sink mode
+        all_put.wait(5.0)
+        raise RuntimeError("oracle down")
+
+    groups = [[(i, 0)] for i in range(6)]
+
+    def stream():
+        for ch in _chunks(groups):
+            yield ch
+        all_put.set()                    # set on the post-last-put next()
+
+    pump = RefinementPump(refine, batch_pairs=1, max_queue_chunks=len(groups))
+    with pytest.raises(RuntimeError, match="oracle down"):
+        pump.run(stream())
+    assert pump.last_stats.chunks_dropped == len(groups) - 1
+    assert not any(t.name == "refine-pump" for t in threading.enumerate())
+
+
+def test_pump_put_blocks_without_busy_wait():
+    """The producer's put is a plain blocking put: while backpressured by
+    a stalled worker, no producer wall accrues to step2_wall (the old
+    50 ms-poll loop charged its own spinning to step ②)."""
+    release = threading.Event()
+
+    def refine(batch):
+        release.wait(5.0)
+        return set(batch)
+
+    def stream():
+        for ch in _chunks([[(i, 0)] for i in range(6)]):
+            yield ch                     # instant production
+
+    pump = RefinementPump(refine, batch_pairs=1, max_queue_chunks=1)
+    out = {}
+    t = threading.Thread(target=lambda: out.setdefault(
+        "res", pump.run(stream())))
+    t.start()
+    time.sleep(0.3)                      # producer sits blocked in q.put
+    release.set()
+    t.join(5.0)
+    assert not t.is_alive()
+    res = out["res"]
+    assert res.pairs == {(i, 0) for i in range(6)}
+    assert res.stats.chunks_dropped == 0
+    # the ~0.3 s spent blocked in put() is not engine time
+    assert res.stats.step2_wall < 0.05
+
+
 def test_pump_engine_failure_shuts_worker_down():
     """A stream that raises mid-sweep must not leak the worker thread."""
     def refine(batch):

@@ -160,16 +160,19 @@ def _banded_density_fixture():
     return feats, want
 
 
-@pytest.mark.parametrize("double_buffer", [True, False])
-def test_sharded_retry_mid_pipeline_drops_and_duplicates_nothing(
-        double_buffer):
+@pytest.mark.parametrize("ring_opts", [
+    dict(double_buffer=True), dict(double_buffer=False),
+    dict(prefetch_depth=1), dict(prefetch_depth=2), dict(prefetch_depth=4),
+], ids=["db", "serial", "depth1", "depth2", "depth4"])
+def test_sharded_retry_mid_pipeline_drops_and_duplicates_nothing(ring_opts):
     """capacity=1 with matches confined to a mid-sweep band: the overflow
-    retry fires while the next step is already in flight, which must be
-    invalidated and re-dispatched at the grown capacity — every chunk
-    emitted exactly once, none truncated, none duplicated."""
+    retry fires while successor steps are already in flight (up to depth-1
+    of them at prefetch_depth=4), all of which must be invalidated and
+    re-dispatched at the grown capacity — every chunk emitted exactly
+    once, none truncated, none duplicated."""
     feats, want = _banded_density_fixture()
     eng = get_engine("sharded", tl=32, tr=32, r_chunk=32, capacity=1,
-                     double_buffer=double_buffer)
+                     **ring_opts)
     chunks = list(eng.evaluate_stream(feats, [[0]], [0.25]))
     assert len(chunks) == 4                      # one per R band
     union = [p for ch in chunks for p in ch.candidates]
@@ -185,8 +188,8 @@ def test_sharded_retry_mid_pipeline_drops_and_duplicates_nothing(
 
 
 def test_sharded_overlap_accounting_pipelined_vs_serial():
-    """overlap_s is the degradation signal: > 0 when the double-buffered
-    loop kept a successor step in flight during host pulls, exactly 0 when
+    """overlap_s is the degradation signal: > 0 when the prefetch ring
+    kept a successor step in flight during host pulls, exactly 0 when
     forced serial (the property benchmarks/run.py gates)."""
     ds = synth.police_records(n_incidents=37, reports_per_incident=2, seed=5)
     feats, clauses, thetas = _materialized_cnf(ds)
@@ -194,11 +197,75 @@ def test_sharded_overlap_accounting_pipelined_vs_serial():
         feats, clauses, thetas)
     serial = get_engine("sharded", double_buffer=False,
                         **_OPTS["sharded"]).evaluate(feats, clauses, thetas)
-    assert db.candidates == serial.candidates
+    depth1 = get_engine("sharded", prefetch_depth=1,
+                        **_OPTS["sharded"]).evaluate(feats, clauses, thetas)
+    deep = get_engine("sharded", prefetch_depth=4,
+                      **_OPTS["sharded"]).evaluate(feats, clauses, thetas)
+    assert db.candidates == serial.candidates == depth1.candidates \
+        == deep.candidates
     assert db.stats.overlap_s > 0
+    assert deep.stats.overlap_s > 0
+    # depth 1 (and its legacy spelling double_buffer=False) is genuinely
+    # serial: the ring is empty during every pull, so overlap is exactly
+    # 0.0 — not merely small
     assert serial.stats.overlap_s == 0.0
-    for st in (db.stats, serial.stats):          # split is always recorded
+    assert depth1.stats.overlap_s == 0.0
+    for st in (db.stats, serial.stats, depth1.stats, deep.stats):
         assert st.dispatch_wall_s > 0 and st.pull_wall_s > 0
+
+
+def test_sharded_prefetch_depth_resolution_and_validation():
+    """double_buffer=False is the legacy spelling of prefetch_depth=1; an
+    explicit prefetch_depth always wins; depth < 1 is rejected."""
+    assert get_engine("sharded").effective_prefetch_depth == 2
+    assert get_engine(
+        "sharded", double_buffer=False).effective_prefetch_depth == 1
+    assert get_engine(
+        "sharded", double_buffer=False,
+        prefetch_depth=4).effective_prefetch_depth == 4
+    assert get_engine("sharded", prefetch_depth=1).effective_prefetch_depth \
+        == 1
+    with pytest.raises(ValueError, match="prefetch_depth"):
+        get_engine("sharded", prefetch_depth=0)
+
+
+@pytest.mark.parametrize("depth", [1, 2, 4])
+def test_sharded_prefetch_depth_stream_parity(depth):
+    """Every ring depth must produce the same disjoint sorted chunks as
+    the batch drain — on the ragged corpus, the empty scaffold, and the
+    vacuous conjunction."""
+    opts = dict(_OPTS["sharded"], prefetch_depth=depth)
+    ds = synth.police_records(n_incidents=37, reports_per_incident=2, seed=5)
+    feats, clauses, thetas = _materialized_cnf(ds)
+    chunks, batch = _assert_stream_matches_batch("sharded", feats, clauses,
+                                                 thetas, opts)
+    assert batch.stats.n_candidates > 0
+    assert len(chunks) > 1
+    _assert_stream_matches_batch("sharded", feats, [], [], opts)
+
+
+def test_program_cache_is_lru_not_fifo(monkeypatch):
+    """A repeatedly-hit key must survive _PROGRAM_CACHE_MAX insertions of
+    one-off keys: hits refresh recency, so churn evicts the cold slots."""
+    from repro.engine.sharded import ShardedEngine
+
+    monkeypatch.setattr(ShardedEngine, "_programs", {})
+    builds = []
+
+    def fake_build(self, mesh, kclauses, thetas, rows_shard, cap, r_chunk,
+                   n_chunks, interpret):
+        builds.append(thetas)
+        return ("program", thetas)
+
+    monkeypatch.setattr(ShardedEngine, "_build_uncached", fake_build)
+    eng = get_engine("sharded")
+    hot = eng._build("mesh", (), (0.5,), 32, 8, 64, 4)
+    for i in range(2 * ShardedEngine._PROGRAM_CACHE_MAX):
+        eng._build("mesh", (), (float(i) + 10.0,), 32, 8, 64, 4)  # churn
+        assert eng._build("mesh", (), (0.5,), 32, 8, 64, 4) is hot, (
+            f"hot program evicted after {i + 1} one-off insertions")
+    assert builds.count((0.5,)) == 1             # never rebuilt
+    assert len(ShardedEngine._programs) <= ShardedEngine._PROGRAM_CACHE_MAX
 
 
 def test_stream_wall_clock_excludes_consumer_time():
