@@ -259,7 +259,8 @@ _GATES = {
         "key": ("engine", "mode"),
         "metrics": ("wall_s", "extraction_cost", "bytes_to_device",
                     "bytes_reshard", "pairs", "agrees_with_cold",
-                    "recalibrations", "theta_swaps", "reservoir_cost"),
+                    "recalibrations", "theta_swaps", "reservoir_cost",
+                    "p50_wall_s"),
     },
     "calibration": {
         "key": ("dataset", "phase"),
@@ -387,19 +388,41 @@ def check_against(baseline_dir: str, regimes, crashed=()) -> list:
     return bad
 
 
-def write_trajectory(pr: str, ran, crashed) -> str:
+def _git_sha() -> str:
+    """Short HEAD SHA, or "" outside a checkout / without git."""
+    import subprocess
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip()
+    except (OSError, subprocess.SubprocessError):
+        return ""
+
+
+def write_trajectory(pr: str, ran, crashed, run_date: str = "") -> str:
     """Write ``BENCH_<pr>.json`` at the repo root: a per-PR snapshot of
     every regime's fresh rows, so the repo accumulates a perf *history*
     (one artifact per PR) rather than only the latest rolling baseline —
     trajectory regressions ("each PR 5% slower") are invisible to a
-    baseline that moves with every merge."""
+    baseline that moves with every merge.
+
+    The header block pins provenance: artifact schema version, the git
+    SHA the rows were measured at, the backend list, and the run date —
+    passed in by the caller (``--run-date`` / ``$FDJ_RUN_DATE``), never
+    sampled here, so re-running the harness against an old checkout
+    cannot silently restamp history."""
+    from repro.engine import ENGINES
     regimes = {}
     for name in ran:
         path = os.path.join(RESULTS_DIR, f"{name}.json")
         if os.path.exists(path):
             with open(path) as f:
                 regimes[name] = json.load(f)
-    art = {"pr": pr, "regimes_run": list(ran), "regimes_crashed": list(crashed),
+    art = {"schema_version": 1, "pr": pr, "git_sha": _git_sha(),
+           "backends": list(ENGINES), "run_date": run_date,
+           "regimes_run": list(ran), "regimes_crashed": list(crashed),
            "regimes": regimes}
     out = os.path.join(os.path.dirname(os.path.dirname(
         os.path.abspath(__file__))), f"BENCH_{pr}.json")
@@ -424,6 +447,10 @@ def main() -> None:
                     help="PR number/tag: write a BENCH_<pr>.json "
                          "trajectory artifact at the repo root (default: "
                          "$FDJ_PR; empty = skip)")
+    ap.add_argument("--run-date", default=os.environ.get("FDJ_RUN_DATE", ""),
+                    help="provenance date stamped into the trajectory "
+                         "header (default: $FDJ_RUN_DATE; never sampled "
+                         "from the clock)")
     args = ap.parse_args()
     only = [s for s in args.only.split(",") if s]
     unknown = [s for s in only if s not in ALL]
@@ -449,7 +476,7 @@ def main() -> None:
             crashed.append(name)
     print(f"# total wall time: {time.time()-t0:.0f}s")
     if args.pr:
-        write_trajectory(args.pr, ran, crashed)
+        write_trajectory(args.pr, ran, crashed, run_date=args.run_date)
     if args.check_against:
         bad = check_against(args.check_against, ran, crashed=crashed)
         if bad:

@@ -116,6 +116,17 @@ def run(fast: bool = True):
         cold_w, warm_w = rows[-3]["wall_s"], rows[-2]["wall_s"]
         print(f"serving,{ename},speedup,warm={cold_w / max(warm_w, 1e-9):.1f}x,"
               f"delta_vs_cold={cold_w / max(rows[-1]['wall_s'], 1e-9):.1f}x")
+
+        # per-query latency quantiles from the service's streaming
+        # histogram (obs.metrics) — the p50 is gated like any other wall
+        hist = svc.metrics.histogram("serve.query_wall_s").summary()
+        lrow = {"engine": ename, "mode": "latency",
+                "p50_wall_s": round(hist["p50"], 4),
+                "p99_wall_s": round(hist["p99"], 4),
+                "queries": int(hist["count"])}
+        rows.append(lrow)
+        print(f"serving,{ename},latency,p50_wall_s={lrow['p50_wall_s']},"
+              f"p99_wall_s={lrow['p99_wall_s']},queries={lrow['queries']}")
     return rows
 
 

@@ -50,6 +50,7 @@ from repro.core.bargain import bargain_precision_subset
 from repro.core.costs import CostLedger
 from repro.core.refine import RefinementPump
 from repro.core.scaffold import Scaffold, min_fpr_thresholds
+from repro.obs.trace import current_tracer
 
 
 @dataclasses.dataclass
@@ -169,6 +170,12 @@ def plan_join(dataset, oracle, proposer, extractor, cfg: FDJConfig, *,
               ledger: Optional[CostLedger] = None,
               label: Optional[Callable] = None) -> JoinPlan:
     """Steps ①–⑥: sample, generate featurizations, scaffold, thresholds."""
+    # planning is recorded as one retroactive span with stage-boundary
+    # events (sampled/featurized/scaffolded/thresholds) — plan_join runs
+    # once per query, so the collection cost is irrelevant
+    tracer = current_tracer()
+    t_plan0 = time.perf_counter()
+    marks: list = []
     rng = np.random.default_rng(cfg.seed)
     ledger = ledger if ledger is not None else oracle.ledger
     if label is None:
@@ -181,11 +188,13 @@ def plan_join(dataset, oracle, proposer, extractor, cfg: FDJConfig, *,
     k_gen = min(int(math.ceil(cfg.gen_positives / rate * 1.25)), n_pairs)
     s1 = _sample_pairs(n_l, n_r, k_gen, rng)
     y1 = label(s1, "labeling")
+    marks.append(("sampled", time.perf_counter(), {"pairs": len(s1)}))
 
     # --- 2. candidate featurizations ----------------------------------------
     specs = generation.get_candidate_featurizations(
         s1, y1, proposer, extractor, dataset.join_prompt, ledger,
         alpha=cfg.alpha, beta=cfg.beta, max_iter=cfg.max_iter, seed=cfg.seed)
+    marks.append(("featurized", time.perf_counter(), {"specs": len(specs)}))
 
     # --- 3. scaffold ----------------------------------------------------------
     d1 = extractor.pair_distances(specs, s1, ledger)
@@ -195,6 +204,8 @@ def plan_join(dataset, oracle, proposer, extractor, cfg: FDJConfig, *,
     if sc.n_clauses == 0:
         # no featurization helps: degenerate to refine-everything (still valid)
         sc = Scaffold(clauses=[])
+    marks.append(("scaffolded", time.perf_counter(),
+                  {"clauses": sc.n_clauses}))
 
     # --- 4. threshold sample --------------------------------------------------
     k_thr = min(int(math.ceil(cfg.thresh_positives / rate * 1.25)), n_pairs)
@@ -231,6 +242,13 @@ def plan_join(dataset, oracle, proposer, extractor, cfg: FDJConfig, *,
         feasible = False
         conjunct_order = None
 
+    if tracer:
+        marks.append(("thresholds", time.perf_counter(),
+                      {"feasible": feasible, "t_prime": t_prime}))
+        tracer.record_span(
+            "plan", t_plan0, time.perf_counter(),
+            attrs={"specs": len(specs), "clauses": sc_local.n_clauses,
+                   "feasible": feasible}, events=marks)
     return JoinPlan(specs=specs, scaffold=sc, used_specs=used_specs,
                     sc_local=sc_local, theta=theta, t_prime=t_prime,
                     feasible=feasible, calib_pairs=list(s2),
@@ -270,7 +288,8 @@ def execute_join(dataset, oracle, extractor, cfg: FDJConfig, plan: JoinPlan,
     need_planes = (not plan.degenerate) or \
         (cfg.precision_target < 1.0 and plan.used_specs)
     if need_planes:
-        feats = provider(plan.used_specs, ledger)
+        with current_tracer().span("extract", specs=len(plan.used_specs)):
+            feats = provider(plan.used_specs, ledger)
 
     # --- 8-9. candidate production + refinement --------------------------------
     # degenerate scaffold: decomposition admits everything (always-sound)
@@ -309,13 +328,18 @@ def execute_join(dataset, oracle, extractor, cfg: FDJConfig, plan: JoinPlan,
         out_pairs = set()
         n_cands = 0
         cand_arr = [] if keep_candidates else None
+        tracer = current_tracer()
         t0 = time.perf_counter()
         for block in iter_cross_product_chunks(n_l, n_r):
+            tb0 = time.perf_counter()
             labs = label(block, "refinement")
             out_pairs |= {p for p, l in zip(block, labs) if l}
             n_cands += len(block)
             if cand_arr is not None:
                 cand_arr.extend(block)
+            if tracer:
+                tracer.record_span("refine_batch", tb0, time.perf_counter(),
+                                   attrs={"pairs": len(block)})
         ledger.record_walls(0.0, time.perf_counter() - t0, 0.0)
     else:
         if plan.degenerate:
@@ -329,14 +353,19 @@ def execute_join(dataset, oracle, extractor, cfg: FDJConfig, plan: JoinPlan,
         out_pairs = set()
         cand_arr = list(candidates)
         n_cands = len(cand_arr)
+        tracer = current_tracer()
         t0 = time.perf_counter()
         if cfg.precision_target >= 1.0:
             labs = label(cand_arr, "refinement")
             out_pairs = {p for p, l in zip(cand_arr, labs) if l}
         else:
             out_pairs = _precision_extension(cand_arr, feats, label, cfg, rng)
+        t1 = time.perf_counter()
+        if tracer:
+            tracer.record_span("refine_batch", t0, t1,
+                               attrs={"pairs": n_cands})
         ledger.record_walls(engine_stats.wall_s if engine_stats else 0.0,
-                            time.perf_counter() - t0, 0.0)
+                            t1 - t0, 0.0)
         ledger.record_engine_stats(engine_stats)
 
     truth = dataset.truth_set
@@ -362,11 +391,13 @@ def fdj_join(dataset, oracle, proposer, extractor, cfg: FDJConfig,
     proposer/extractor: generation protocol impls (dataset-owned)."""
     ledger = oracle.ledger
     label = make_label_fn(oracle, {})   # shared: refinement reuses sample labels
-    plan = plan_join(dataset, oracle, proposer, extractor, cfg,
-                     ledger=ledger, label=label)
-    return execute_join(dataset, oracle, extractor, cfg, plan,
-                        plane_provider=plane_provider, ledger=ledger,
-                        label=label)
+    with current_tracer().span("fdj_join", engine=cfg.engine,
+                               stream=cfg.stream_refinement):
+        plan = plan_join(dataset, oracle, proposer, extractor, cfg,
+                         ledger=ledger, label=label)
+        return execute_join(dataset, oracle, extractor, cfg, plan,
+                            plane_provider=plane_provider, ledger=ledger,
+                            label=label)
 
 
 def apply_conjunct_order(clauses: list, theta: np.ndarray,

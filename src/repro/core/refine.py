@@ -38,6 +38,7 @@ import time
 from typing import Callable, Iterable, Optional
 
 from repro.engine.base import CandidateChunk, EngineStats
+from repro.obs.trace import current_tracer
 
 _DONE = object()                       # queue sentinel
 
@@ -103,6 +104,15 @@ class RefinementPump:
         failure: list = []
 
         q: queue.Queue = queue.Queue(maxsize=self.max_queue_chunks)
+        # tracing across the thread boundary (DESIGN.md §7): contextvars do
+        # not cross threading.Thread, so the worker gets the tracer and its
+        # parent span (this thread's innermost open span — the query/join
+        # root) captured *here*, by closure.  Worker batches render on
+        # their own "refine-pump" track: they run concurrently with
+        # band_step slices and must not share a lane with them.
+        tracer = current_tracer()
+        pump_parent = tracer.current_span() if tracer else None
+        metrics = getattr(ledger, "metrics", None)
 
         def worker():
             pending: list = []
@@ -111,12 +121,23 @@ class RefinementPump:
             def flush(batch):
                 t0 = time.perf_counter()
                 accepted.update(self.refine_batch(batch))
-                refine_s[0] += time.perf_counter() - t0
+                t1 = time.perf_counter()
+                refine_s[0] += t1 - t0
                 stats.batches += 1
+                if tracer:
+                    tracer.record_span(
+                        "refine_batch", t0, t1, parent=pump_parent,
+                        track="refine-pump",
+                        attrs={"pairs": len(batch), "batch": stats.batches})
+                if metrics is not None:
+                    metrics.inc("refine.batches")
+                    metrics.inc("refine.pairs", len(batch))
 
             try:
                 while True:
                     item = q.get()
+                    if metrics is not None:
+                        metrics.set_gauge("refine.queue_depth", q.qsize())
                     if item is _DONE:
                         done_seen = True
                         if pending:
@@ -168,6 +189,8 @@ class RefinementPump:
                     # until _DONE, so this can never hang (and never
                     # busy-waits producer wall into step2_wall)
                     q.put(chunk.candidates)
+                    if metrics is not None:
+                        metrics.set_gauge("refine.queue_depth", q.qsize())
         finally:
             # the engine stream may raise mid-sweep: still shut the worker
             # down (discarding queued-but-unrefined chunks) so no thread
@@ -188,7 +211,12 @@ class RefinementPump:
         if self.final is not None:
             t0 = time.perf_counter()
             accepted = set(self.final(candidates))
-            refine_s[0] += time.perf_counter() - t0
+            t1 = time.perf_counter()
+            refine_s[0] += t1 - t0
+            if tracer:
+                tracer.record_span("refine_final", t0, t1,
+                                   parent=pump_parent,
+                                   attrs={"candidates": len(candidates)})
 
         stats.refine_wall = refine_s[0]
         stats.total_wall = time.perf_counter() - t_start

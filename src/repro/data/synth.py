@@ -146,14 +146,18 @@ def movie_likes(n: int = 400, persons_per_sentence: int = 1,
         rows.append((i, (i + 1) % n))             # person i likes movie i+1
     texts, f_person, f_movie = [], [], []
     for ridx, (p, m) in enumerate(rows):
-        extra = [persons[(p + 7 * (j + 1)) % n] for j in range(persons_per_sentence - 1)]
+        extra = [persons[(p + 7 * (j + 1)) % n]
+                 for j in range(persons_per_sentence - 1)]
         names = [persons[p]] + extra
-        namestr = ", ".join(names[:-1]) + (" and " + names[-1] if len(names) > 1 else names[0] if len(names) == 1 else "")
-        if len(names) == 1:
+        if len(names) > 1:
+            namestr = ", ".join(names[:-1]) + " and " + names[-1]
+        else:
             namestr = names[0]
         rr = _rng(seed, "filler", ridx)
         t1, t2 = _filler(rr, filler_sentences), _filler(rr, filler_sentences)
-        sent = f"{t1} For example, {namestr} like{'s' if len(names)==1 else ''} the movie {movies[m]}. {t2}".strip()
+        verb = "likes" if len(names) == 1 else "like"
+        sent = (f"{t1} For example, {namestr} {verb} "
+                f"the movie {movies[m]}. {t2}").strip()
         texts.append(sent)
         f_person.append(" ".join(names))
         f_movie.append(movies[m])

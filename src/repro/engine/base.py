@@ -42,7 +42,9 @@ from __future__ import annotations
 import abc
 import dataclasses
 import time
-from typing import Iterator, Sequence
+from typing import Iterator, Optional, Sequence
+
+from repro.obs.trace import current_tracer
 
 # vacuous-conjunction (empty clause list) emissions are chunked so one host
 # list never materializes the whole n_l x n_r cross product: each chunk
@@ -175,6 +177,18 @@ class ChunkDelta:
     pull_s: float = 0.0                # host time pulling + filtering
     overlap_s: float = 0.0             # host work done with a step in flight
     conjunct_evals: int = 0            # (pair, clause) evals this chunk did
+    # optional tracing payload (DESIGN.md §7) — backends that measure their
+    # own sub-phase timestamps attach them here and ``_stream_checked``
+    # turns them into child slices of the chunk's ``band_step[k]`` span.
+    # ``trace`` is a list of ``{"name", "t0", "t1", "attrs"}`` dicts (perf-
+    # counter seconds), ``trace_events`` a list of ``(name, ts, attrs)``
+    # instants (overflow / invalidate / redispatch), ``track`` the
+    # rendering lane (the sharded ring uses one lane per ring slot so
+    # concurrent steps render side by side instead of mis-nesting).  All
+    # three are ignored — and should stay None — when tracing is off.
+    trace: Optional[list] = None
+    trace_events: Optional[list] = None
+    track: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -225,6 +239,12 @@ class CnfEngine(abc.ABC):
         return self._stream_checked(feats, clauses, thetas, n_l, n_r)
 
     def _stream_checked(self, feats, clauses, thetas, n_l, n_r):
+        # tracing (DESIGN.md §7): band_step spans are recorded
+        # *retroactively* from timestamps the loop measures anyway — a span
+        # held open across ``yield`` would bill consumer hold time to the
+        # engine.  NULL_TRACER is falsy, so the untraced hot loop pays one
+        # truthiness check per chunk and zero allocations.
+        tracer = current_tracer()
         t_prev = time.perf_counter()
         if not clauses:
             # vacuous conjunction: admit everything without touching a
@@ -233,10 +253,16 @@ class CnfEngine(abc.ABC):
             # the whole n_l x n_r cross product on a large corpus
             idx = 0
             for cands in iter_cross_product_chunks(n_l, n_r):
+                t_now = time.perf_counter()
+                if tracer:
+                    tracer.record_span(
+                        f"band_step[{idx}]", t_prev, t_now,
+                        attrs={"engine": self.name, "vacuous": True,
+                               "candidates": len(cands)})
                 yield CandidateChunk(
                     cands, EngineStats(self.name, n_l=n_l, n_r=n_r,
                                        n_candidates=len(cands),
-                                       wall_s=time.perf_counter() - t_prev),
+                                       wall_s=t_now - t_prev),
                     idx)
                 idx += 1
                 t_prev = time.perf_counter()
@@ -250,10 +276,14 @@ class CnfEngine(abc.ABC):
             if not isinstance(delta, ChunkDelta):
                 delta = ChunkDelta(*delta)
             pairs = sorted(delta.pairs)
+            t_now = time.perf_counter()
+            if tracer:
+                self._trace_band_step(tracer, idx, delta, len(pairs),
+                                      t_prev, t_now)
             yield CandidateChunk(
                 pairs, EngineStats(self.name, n_l=n_l, n_r=n_r,
                                    n_candidates=len(pairs),
-                                   wall_s=time.perf_counter() - t_prev,
+                                   wall_s=t_now - t_prev,
                                    dispatch_wall_s=delta.dispatch_s,
                                    pull_wall_s=delta.pull_s,
                                    overlap_s=delta.overlap_s,
@@ -262,6 +292,24 @@ class CnfEngine(abc.ABC):
                                    bytes_reshard=delta.bytes_reshard,
                                    conjunct_evals=delta.conjunct_evals), idx)
             t_prev = time.perf_counter()
+
+    def _trace_band_step(self, tracer, idx, delta, n_pairs, t_prev, t_now):
+        """Record one chunk's ``band_step[idx]`` span plus any backend-
+        provided sub-slices (sharded dispatch/pull windows).  The step span
+        opens at the earliest sub-slice start — for a prefetched ring step
+        that is the *enqueue* instant, which predates ``t_prev``, so steps
+        overlap in time and each rides its own ring-slot track."""
+        slices = delta.trace or ()
+        t0 = min([t_prev] + [s["t0"] for s in slices])
+        step = tracer.record_span(
+            f"band_step[{idx}]", t0, t_now, track=delta.track,
+            attrs={"engine": self.name, "candidates": n_pairs,
+                   "bytes_to_host": delta.bytes_to_host,
+                   "conjunct_evals": delta.conjunct_evals},
+            events=delta.trace_events)
+        for s in slices:
+            tracer.record_span(s["name"], s["t0"], s["t1"], parent=step,
+                               track=delta.track, attrs=s.get("attrs"))
 
     @abc.abstractmethod
     def _evaluate_stream(self, feats, clauses, thetas, n_l: int, n_r: int):

@@ -110,6 +110,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.engine import extract
 from repro.engine.base import ChunkDelta, CnfEngine
+from repro.obs.trace import current_tracer
 
 
 @dataclasses.dataclass
@@ -121,6 +122,8 @@ class _InFlight:
     cnt: object
     base: object
     evals: object                      # per-device int32 conjunct-eval units
+    t_enq: float = 0.0                 # perf_counter at enqueue (trace)
+    events: list = dataclasses.field(default_factory=list)  # trace instants
 
 
 _HOST_MESH = None                      # shared default mesh: stable cache key
@@ -350,8 +353,15 @@ class ShardedEngine(CnfEngine):
         # layout — or assembles on device from a resident plane set
         # (serving store) with zero H2D, paying a one-time D2D reshard
         # that is memoized on the plane set (warm queries: 0 bytes).
+        tracer = current_tracer()
+        t_stage0 = time.perf_counter()
         staged = cnf_ops.stage_planes(feats, clauses, tl=l_shards * self.tl,
                                       tr=r_chunk, mesh=mesh, l_axes=l_axes)
+        if tracer:
+            tracer.record_span(
+                "stage_planes", t_stage0, time.perf_counter(),
+                attrs={"bytes_h2d": staged.bytes_h2d,
+                       "bytes_reshard": staged.bytes_reshard})
         kclauses = staged.kclauses
         pl_n, pr_n = staged.emb_l.shape[1], staged.emb_r.shape[1]
         rows_shard = pl_n // l_shards
@@ -381,7 +391,7 @@ class ShardedEngine(CnfEngine):
                              r_chunk, n_chunks)
             buf, cnt, base, evals = fn(*args, jnp.int32(k))
             timing["dispatch"] += time.perf_counter() - t0
-            return _InFlight(k, cap, buf, cnt, base, evals)
+            return _InFlight(k, cap, buf, cnt, base, evals, t_enq=t0)
 
         def pull_counts(step):
             """Block on step's counts + eval units; returns (counts,
@@ -406,6 +416,8 @@ class ShardedEngine(CnfEngine):
                 next_k += 1
             step = ring.popleft()
             k = step.k
+            t_enq = step.t_enq         # first enqueue: the in-flight window
+            step_events = step.events  # opens here even across retries
             t_pull0 = time.perf_counter()
             bytes_to_host = 0
             conjunct_evals = 0         # includes retry attempts: real work
@@ -424,10 +436,22 @@ class ShardedEngine(CnfEngine):
                 caps[:] = extract.grow_caps(caps, counts)
                 t_retry0 = time.perf_counter()
                 successors = [s.k for s in ring]
+                if tracer:
+                    step_events.append(
+                        ("overflow", t_retry0,
+                         {"counts_max": int(counts.max()),
+                          "cap": step.cap}))
+                    if successors:
+                        step_events.append(
+                            ("invalidate", t_retry0, {"steps": successors}))
                 ring.clear()
                 step = dispatch(k)
                 for kk in successors:
-                    ring.append(dispatch(kk))
+                    redis = dispatch(kk)
+                    if tracer:
+                        redis.events.append(
+                            ("redispatch", redis.t_enq, {"cap": redis.cap}))
+                    ring.append(redis)
                 t_pull0 += time.perf_counter() - t_retry0   # it's dispatch,
                 counts, ev, nb = pull_counts(step)          # not pull
                 conjunct_evals += ev
@@ -465,7 +489,8 @@ class ShardedEngine(CnfEngine):
                 pairs = list(zip(arr[:, 0].tolist(), arr[:, 1].tolist()))
             else:
                 pairs = []
-            pull_s = time.perf_counter() - t_pull0
+            t_pull1 = time.perf_counter()
+            pull_s = t_pull1 - t_pull0
             dispatch_s, timing["dispatch"] = timing["dispatch"], 0.0
             # overlap accounting: host work done while a successor step was
             # in flight on the device — this pull/filter window, plus the
@@ -474,11 +499,30 @@ class ShardedEngine(CnfEngine):
             # to serial is visible in EngineStats (and gated in
             # benchmarks/run.py).
             overlap_s = (pull_s if ring else 0.0) + hold_overlap
+            trace = track = None
+            if tracer:
+                # the "dispatch" slice is the *in-flight window* (enqueue →
+                # pull-begin): at depth ≥ 2 it contains predecessors' pull
+                # windows — the ring overlap, visible as cross-track slice
+                # overlap in Perfetto; at depth 1 it never does.  The host
+                # enqueue wall itself rides along as ``enqueue_s`` (that is
+                # what reconciles against wall.step2_dispatch_s).
+                trace = [
+                    {"name": "dispatch", "t0": t_enq, "t1": t_pull0,
+                     "attrs": {"enqueue_s": dispatch_s, "cap": cap,
+                               "band": k}},
+                    {"name": "pull", "t0": t_pull0, "t1": t_pull1,
+                     "attrs": {"bytes": bytes_to_host,
+                               "candidates": len(pairs)}},
+                ]
+                track = f"ring{k % depth}"
             t_yield = time.perf_counter()
             yield ChunkDelta(pairs, bytes_to_host, chunk_h2d, chunk_reshard,
                              dispatch_s=dispatch_s, pull_s=pull_s,
                              overlap_s=overlap_s,
-                             conjunct_evals=conjunct_evals)
+                             conjunct_evals=conjunct_evals,
+                             trace=trace, trace_events=step_events or None,
+                             track=track)
             hold = time.perf_counter() - t_yield
             hold_overlap = hold if ring else 0.0
         self.last_sweep_caps = caps.copy()

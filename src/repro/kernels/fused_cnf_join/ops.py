@@ -11,6 +11,7 @@ pair indices.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Sequence
 
 import jax
@@ -308,8 +309,10 @@ def evaluate_corpus_stream(feats: Sequence, clauses: Sequence, thetas,
     in pair-clause units over padded tiles — honest device work).
     """
     from repro.engine.base import ChunkDelta
+    from repro.obs.trace import current_tracer
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
+    tracer = current_tracer()
     staged = stage_planes(feats, clauses, tl=tl, tr=tr)
     demb_l, demb_r, dscal_l, dscal_r = staged.arrays
     kclauses, n_l, n_r, h2d = (staged.kclauses, staged.n_l, staged.n_r,
@@ -322,17 +325,33 @@ def evaluate_corpus_stream(feats: Sequence, clauses: Sequence, thetas,
     thetas = tuple(float(t) for t in thetas)
     for i0 in range(0, pl_n, l_block):
         rows = min(l_block, pl_n - i0)
+        t0 = time.perf_counter()
         packed, evals_grid = cnf_join_block(
             lax.slice_in_dim(demb_l, i0, i0 + rows, axis=1), demb_r,
             lax.slice_in_dim(dscal_l, i0, i0 + rows, axis=1), dscal_r,
             kclauses, thetas, tl=tl, tr=tr, interpret=interpret,
             early_reject=early_reject, with_evals=True)
+        t1 = time.perf_counter()
         host_mask = np.asarray(packed)              # O(rows * n_r / 8) pull
         evals_host = np.asarray(evals_grid)         # one int32 per tile
+        t2 = time.perf_counter()
         ok = ref.unpack_mask(host_mask, pr_n)[: max(n_l - i0, 0), :n_r]
         ii, jj = np.nonzero(ok)
+        # trace sub-slices only (DESIGN.md §7): the kernel call vs the
+        # blocking mask pull.  Deliberately NOT named dispatch/pull — this
+        # backend's EngineStats carries no dispatch/pull walls, and the
+        # reconciliation in launch/trace_report sums by those names.
+        trace = None
+        if tracer:
+            trace = [
+                {"name": "kernel", "t0": t0, "t1": t1,
+                 "attrs": {"rows": rows}},
+                {"name": "mask_pull", "t0": t1, "t1": t2,
+                 "attrs": {"bytes": host_mask.nbytes + evals_host.nbytes}},
+            ]
         yield ChunkDelta(
             list(zip((ii + i0).tolist(), jj.tolist())),
             bytes_to_host=host_mask.nbytes + evals_host.nbytes,
             bytes_h2d=h2d if i0 == 0 else 0,
-            conjunct_evals=int(evals_host.sum()) * tl * tr)
+            conjunct_evals=int(evals_host.sum()) * tl * tr,
+            trace=trace)

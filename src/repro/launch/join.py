@@ -15,17 +15,23 @@ import argparse
 import json
 
 
+from typing import Optional
+
 from repro.core.costs import naive_join_cost
 from repro.core.join import FDJConfig, fdj_join
 from repro.data import synth
 from repro.data.simulated_llm import SimulatedExtractor, SimulatedProposer
 from repro.engine import ENGINES
+from repro.obs import Tracer, use_tracer, write_trace
 
 
 def run_join(dataset: str = "police_records", target: float = 0.9,
              delta: float = 0.1, precision_target: float = 1.0,
              engine: str = "numpy", size: float = 1.0, seed: int = 0,
-             stream: bool = False, pods: int = 1) -> dict:
+             stream: bool = False, pods: int = 1,
+             prefetch_depth: Optional[int] = None,
+             r_chunk: Optional[int] = None,
+             trace_out: Optional[str] = None) -> dict:
     gens = {
         "police_records": lambda: synth.police_records(
             n_incidents=int(300 * size), reports_per_incident=3, seed=seed),
@@ -39,8 +45,20 @@ def run_join(dataset: str = "police_records", target: float = 0.9,
     oracle = ds.make_oracle()
     cfg = FDJConfig(recall_target=target, delta=delta, engine=engine,
                     precision_target=precision_target, seed=seed,
-                    stream_refinement=stream, pods=pods)
-    res = fdj_join(ds, oracle, SimulatedProposer(ds), SimulatedExtractor(ds, seed=seed), cfg)
+                    stream_refinement=stream, pods=pods,
+                    prefetch_depth=prefetch_depth,
+                    engine_opts={"r_chunk": r_chunk} if r_chunk else {})
+    tracer = Tracer() if trace_out else None
+    with use_tracer(tracer):
+        res = fdj_join(ds, oracle, SimulatedProposer(ds),
+                       SimulatedExtractor(ds, seed=seed), cfg)
+    if tracer is not None:
+        write_trace(tracer, trace_out, metadata={
+            "dataset": ds.name, "engine": engine, "stream": stream,
+            "prefetch_depth": prefetch_depth,
+            "wall_summary": res.cost.wall_summary(),
+            "breakdown": res.cost.breakdown(),
+        })
     naive = naive_join_cost(ds.texts_l, ds.texts_r)
     return {
         "dataset": ds.name, "n_l": ds.n_l, "n_r": ds.n_r,
@@ -109,10 +127,23 @@ def main():
                          "for the emulated (2, 16, 16) dry-run)")
     ap.add_argument("--size", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--prefetch-depth", type=int, default=None,
+                    help="sharded engine: band steps in flight at once "
+                         "(FDJConfig.prefetch_depth; 1 = serial)")
+    ap.add_argument("--r-chunk", type=int, default=None,
+                    help="R-band width in columns (engine_opts; smaller = "
+                         "more band steps, e.g. to exercise the prefetch "
+                         "ring on a small corpus)")
+    ap.add_argument("--trace-out", default=None, metavar="FILE",
+                    help="write a Perfetto/Chrome trace-event JSON of the "
+                         "run (load in ui.perfetto.dev, or summarize with "
+                         "python -m repro.launch.trace_report FILE)")
     args = ap.parse_args()
     out = run_join(args.dataset, args.target, args.delta,
                    args.precision_target, args.engine, args.size, args.seed,
-                   stream=args.stream, pods=args.pods)
+                   stream=args.stream, pods=args.pods,
+                   prefetch_depth=args.prefetch_depth, r_chunk=args.r_chunk,
+                   trace_out=args.trace_out)
     print(json.dumps(out, indent=1))
 
 

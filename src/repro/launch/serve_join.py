@@ -26,6 +26,7 @@ import json
 from repro.core.join import FDJConfig
 from repro.data import synth
 from repro.engine import ENGINES
+from repro.obs import Tracer, use_tracer, write_trace
 from repro.serving.join_service import DeltaRows, JoinService, hold_out_right
 from repro.serving.planes import FeaturePlaneStore
 
@@ -77,7 +78,8 @@ def run_serve(dataset: str = "police_records", engine: str = "numpy",
               stream: bool = False, size: float = 1.0, target: float = 0.9,
               delta: float = 0.1, holdout: int = 0,
               script: str = "query,query", seed: int = 0,
-              byte_budget=None, engine_opts=None) -> dict:
+              byte_budget=None, engine_opts=None,
+              trace_out=None) -> dict:
     ds = _dataset(dataset, size, seed)
     pool = None
     if holdout:
@@ -86,6 +88,33 @@ def run_serve(dataset: str = "police_records", engine: str = "numpy",
                     stream_refinement=stream, seed=seed,
                     engine_opts=engine_opts or {})
     svc = JoinService(ds, cfg, store=FeaturePlaneStore(byte_budget))
+    tracer = Tracer() if trace_out else None
+    events = []
+    with use_tracer(tracer):
+        events = _run_script(svc, script, pool)
+    if tracer is not None:
+        write_trace(tracer, trace_out, metadata={
+            "dataset": svc.dataset.name, "engine": engine, "script": script,
+            "wall_summary": svc.ledger.wall_summary(),
+            "metrics": svc.metrics.as_dict(),
+        })
+    summary = {
+        "dataset": svc.dataset.name, "n_l": svc.dataset.n_l,
+        "n_r": svc.dataset.n_r, "queries": svc.queries,
+        "appends": svc.appends,
+        "service_ledger": {k: round(v, 6)
+                           for k, v in svc.ledger.breakdown().items()},
+        "serving": svc.ledger.serving_summary(),
+        "latency": {k: round(v, 4) for k, v in
+                    svc.metrics.histogram("serve.query_wall_s")
+                    .summary().items()},
+        "store": svc.store.snapshot(),
+    }
+    print(json.dumps({"summary": summary}, indent=1))
+    return {"events": events, "summary": summary}
+
+
+def _run_script(svc: JoinService, script: str, pool) -> list:
     events = []
     for raw in [s for s in script.split(",") if s.strip()]:
         name, kw = _parse_op(raw.strip())
@@ -116,17 +145,7 @@ def run_serve(dataset: str = "police_records", engine: str = "numpy",
             raise ValueError(f"unknown script op {raw!r}")
         events.append(ev)
         print(json.dumps(ev))
-    summary = {
-        "dataset": svc.dataset.name, "n_l": svc.dataset.n_l,
-        "n_r": svc.dataset.n_r, "queries": svc.queries,
-        "appends": svc.appends,
-        "service_ledger": {k: round(v, 6)
-                           for k, v in svc.ledger.breakdown().items()},
-        "serving": svc.ledger.serving_summary(),
-        "store": svc.store.snapshot(),
-    }
-    print(json.dumps({"summary": summary}, indent=1))
-    return {"events": events, "summary": summary}
+    return events
 
 
 def main():
@@ -143,10 +162,14 @@ def main():
     ap.add_argument("--byte-budget", type=int, default=None,
                     help="plane-store device byte budget (LRU eviction)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace-out", default=None, metavar="FILE",
+                    help="write a Perfetto/Chrome trace-event JSON of the "
+                         "whole script run (per-query span trees; summarize "
+                         "with python -m repro.launch.trace_report FILE)")
     args = ap.parse_args()
     run_serve(args.dataset, args.engine, args.stream, args.size, args.target,
               args.delta, args.holdout, args.script, args.seed,
-              args.byte_budget)
+              args.byte_budget, trace_out=args.trace_out)
 
 
 if __name__ == "__main__":

@@ -108,8 +108,10 @@ def gqa_attention(
                     scores_dtype=sdt)
     else:
         idx = cache["index"]
-        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), idx, axis=1)
-        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), idx, axis=1)
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), idx, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), idx, axis=1)
         # mask out unwritten cache slots via causal offset
         out = _sdpa(q, ck, cv, causal=True, q_offset=idx, valid_from=valid_from,
                     scores_dtype=sdt)
@@ -198,8 +200,10 @@ def mla_attention(
     new_cache = None
     if cache is not None:
         idx = cache["index"]
-        ckv = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv.astype(cache["ckv"].dtype), idx, axis=1)
-        kr = jax.lax.dynamic_update_slice_in_dim(cache["kr"], kr.astype(cache["kr"].dtype), idx, axis=1)
+        ckv = jax.lax.dynamic_update_slice_in_dim(
+            cache["ckv"], ckv.astype(cache["ckv"].dtype), idx, axis=1)
+        kr = jax.lax.dynamic_update_slice_in_dim(
+            cache["kr"], kr.astype(cache["kr"].dtype), idx, axis=1)
         new_cache = {"ckv": ckv, "kr": kr, "index": idx + s}
         q_offset = idx
     else:
@@ -225,11 +229,16 @@ def mla_attention(
         probs = jax.nn.softmax(scores, axis=-1).astype(sdt)
         # out = probs @ V = probs @ (ckv W_uv): fold combine into latent too
         o_lat = jnp.einsum("bhst,btr->bshr", probs, ckv.astype(sdt))
-        out = jnp.einsum("bshr,rhv->bshv", o_lat.astype(compute_dtype), params["w_uv"].astype(compute_dtype))
+        out = jnp.einsum("bshr,rhv->bshv", o_lat.astype(compute_dtype),
+                         params["w_uv"].astype(compute_dtype))
     else:
         k_nope = jnp.einsum("btr,rhk->bthk", ckv, params["w_uk"].astype(compute_dtype))
         v = jnp.einsum("btr,rhv->bthv", ckv, params["w_uv"].astype(compute_dtype))
-        k = jnp.concatenate([k_nope, jnp.broadcast_to(kr[:, :, None, :], (b, t, cfg.num_heads, m.qk_rope_head_dim))], axis=-1)
+        k = jnp.concatenate(
+            [k_nope,
+             jnp.broadcast_to(kr[:, :, None, :],
+                              (b, t, cfg.num_heads, m.qk_rope_head_dim))],
+            axis=-1)
         qf = jnp.concatenate([q_nope, q_rope], axis=-1)
         out = _sdpa(qf, k, v, causal=True, q_offset=q_offset, valid_from=valid_from,
                 scores_dtype=sdt)
@@ -269,8 +278,10 @@ def cross_attention(
     compute_dtype=jnp.bfloat16,
 ):
     q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(compute_dtype))
-    k = jnp.einsum("bmd,dhk->bmhk", memory.astype(compute_dtype), params["wk"].astype(compute_dtype))
-    v = jnp.einsum("bmd,dhk->bmhk", memory.astype(compute_dtype), params["wv"].astype(compute_dtype))
+    k = jnp.einsum("bmd,dhk->bmhk", memory.astype(compute_dtype),
+                   params["wk"].astype(compute_dtype))
+    v = jnp.einsum("bmd,dhk->bmhk", memory.astype(compute_dtype),
+                   params["wv"].astype(compute_dtype))
     out = _sdpa(q, k, v, causal=False, q_offset=0)
     out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(compute_dtype))
     return jnp.tanh(params["gate"].astype(jnp.float32)).astype(out.dtype) * out

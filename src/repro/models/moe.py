@@ -45,7 +45,8 @@ def moe_defs(cfg: ModelConfig) -> ParamTree:
 
 def _router(params, x_flat, mo: MoEConfig):
     """x_flat: (T, d) -> weights (T,k), ids (T,k), aux_loss scalar."""
-    logits = jnp.einsum("td,de->te", x_flat.astype(jnp.float32), params["router"].astype(jnp.float32))
+    logits = jnp.einsum("td,de->te", x_flat.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
     probs = jax.nn.softmax(logits, axis=-1)
     weights, ids = jax.lax.top_k(probs, mo.top_k)
     weights = weights / jnp.clip(jnp.sum(weights, axis=-1, keepdims=True), 1e-9)

@@ -72,6 +72,8 @@ from repro.core.join import (FDJConfig, JoinPlan, JoinResult, _get_engine,
                              make_label_fn, plan_join)
 from repro.core.scaffold import min_fpr_thresholds, ordered_conjuncts
 from repro.core.refine import RefinementPump
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import current_tracer
 from repro.serving.planes import (FeaturePlaneStore,
                                   corpus_fingerprint)
 
@@ -212,6 +214,13 @@ class JoinService:
         self._evals: dict = {}     # plan key -> _EvalCache
         self._reservoirs: dict = {}  # plan key -> _Reservoir (calibration)
         self.ledger = CostLedger() # service-lifetime accumulation
+        # service-lifetime metrics (DESIGN.md §7).  Each per-query/append
+        # ledger is bound to this registry, so every flow feeds it exactly
+        # once as it happens; the lifetime ledger stays UNbound — its
+        # ``absorb`` would re-feed the same flows.  Invariant:
+        # ``ledger_from_metrics(self.metrics) == self.ledger`` at all times
+        # (tests/test_obs.py pins it).
+        self.metrics = MetricsRegistry()
         self.queries = 0
         self.appends = 0
 
@@ -245,6 +254,26 @@ class JoinService:
         returns pairs byte-identical to a cold ``fdj_join`` with the same
         config, on every engine and in stream mode.
         """
+        tracer = current_tracer()
+        with tracer.span("query", n=self.queries) as sp:
+            out = self._query_impl(
+                engine=engine, stream=stream, recall_target=recall_target,
+                precision_target=precision_target, delta=delta,
+                refresh_plan=refresh_plan, incremental=incremental,
+                **cfg_overrides)
+            if tracer:
+                sp.set(engine=out.join.engine_stats.engine
+                       if out.join.engine_stats else "none",
+                       plan_hit=out.plan_hit, delta_rows=out.delta_rows,
+                       candidates=out.join.candidate_count)
+        self.metrics.inc("serve.plan_hits" if out.plan_hit
+                         else "serve.plan_misses")
+        self.metrics.observe("serve.query_wall_s", out.wall_s)
+        return out
+
+    def _query_impl(self, *, engine, stream, recall_target, precision_target,
+                    delta, refresh_plan, incremental,
+                    **cfg_overrides) -> ServeResult:
         t0 = time.perf_counter()
         overrides = dict(cfg_overrides)
         for k, v in (("engine", engine), ("stream_refinement", stream),
@@ -256,6 +285,7 @@ class JoinService:
         cfg = dataclasses.replace(self.cfg, **overrides)
 
         qledger = CostLedger()
+        qledger.bind_metrics(self.metrics)   # flows feed once, as they happen
         oracle = self.dataset.make_oracle()
         oracle.ledger = qledger
         label = make_label_fn(oracle, {})
@@ -301,7 +331,10 @@ class JoinService:
         res = self._reservoirs.get(key)
         if (cfg.recalibrate and plan_hit and not plan.degenerate
                 and res is not None and res.n_r < self.dataset.n_r):
-            self._recalibrate(cfg, key, plan, res, label, provider, qledger)
+            with current_tracer().span("recalibrate",
+                                       reservoir=len(res.pairs)):
+                self._recalibrate(cfg, key, plan, res, label, provider,
+                                  qledger)
 
         cached = self._evals.get(key)
         n_r = self.dataset.n_r
@@ -420,19 +453,23 @@ class JoinService:
             return
 
         # --- 4. re-sweep + hot-swap ---------------------------------------
-        thr = min_fpr_thresholds(cd, res.labels, adj.t_prime, method="auto")
-        old_theta = np.asarray(plan.theta, float)
-        drift = float(np.max(np.abs(thr.theta - old_theta))) \
-            if thr.theta.shape == old_theta.shape else float("inf")
-        plan.theta = thr.theta
-        plan.t_prime = adj.t_prime
-        plan.feasible = thr.feasible
-        # new thresholds move per-conjunct pass rates: refresh the cached
-        # plan's evaluation order from the same reservoir distances (free —
-        # cd is already in hand; candidate set invariant either way)
-        plan.conjunct_order = ordered_conjuncts(cd, thr.theta,
-                                                plan.sc_local.clauses)
-        self._evals.pop(key, None)          # candidates predate the swap
+        with current_tracer().span("theta_swap") as sp:
+            thr = min_fpr_thresholds(cd, res.labels, adj.t_prime,
+                                     method="auto")
+            old_theta = np.asarray(plan.theta, float)
+            drift = float(np.max(np.abs(thr.theta - old_theta))) \
+                if thr.theta.shape == old_theta.shape else float("inf")
+            plan.theta = thr.theta
+            plan.t_prime = adj.t_prime
+            plan.feasible = thr.feasible
+            # new thresholds move per-conjunct pass rates: refresh the
+            # cached plan's evaluation order from the same reservoir
+            # distances (free — cd is already in hand; candidate set
+            # invariant either way)
+            plan.conjunct_order = ordered_conjuncts(cd, thr.theta,
+                                                    plan.sc_local.clauses)
+            self._evals.pop(key, None)      # candidates predate the swap
+            sp.set(drift=drift, t_prime=adj.t_prime)
         qledger.record_recalibration(swapped=True, drift=drift,
                                      dollars=dollars)
 
@@ -558,6 +595,7 @@ class JoinService:
         self._fp_r = corpus_fingerprint(ds.name, "r", new_texts, new_fields)
 
         aledger = CostLedger()
+        aledger.bind_metrics(self.metrics)   # same once-per-flow feed as query
         extractor = self._extractor_factory(self.dataset)
         embedder = getattr(extractor, "_embedder", None)
         snap0 = self.store.snapshot()

@@ -74,15 +74,17 @@ def test_parse_replica_groups_explicit_and_iota():
 
 def test_pod_crossing_stats_classifies_by_group_span():
     from repro.distributed.hlo_analysis import pod_crossing_stats
-    hlo = """
-HloModule m
-
-ENTRY %main (x: s32[1]) -> (s32[8], s32[2]) {
-  %x = s32[1]{0} parameter(0)
-  %intra = s32[8]{0} all-gather(s32[1]{0} %x), replica_groups={{0,1,2,3,4,5,6,7},{8,9,10,11,12,13,14,15}}, dimensions={0}
-  %cross = s32[2]{0} all-gather(s32[1]{0} %x), replica_groups={{0,8},{1,9},{2,10},{3,11},{4,12},{5,13},{6,14},{7,15}}, dimensions={0}
-}
-"""
+    hlo = (
+        "\nHloModule m\n\n"
+        "ENTRY %main (x: s32[1]) -> (s32[8], s32[2]) {\n"
+        "  %x = s32[1]{0} parameter(0)\n"
+        "  %intra = s32[8]{0} all-gather(s32[1]{0} %x), "
+        "replica_groups={{0,1,2,3,4,5,6,7},"
+        "{8,9,10,11,12,13,14,15}}, dimensions={0}\n"
+        "  %cross = s32[2]{0} all-gather(s32[1]{0} %x), "
+        "replica_groups={{0,8},{1,9},{2,10},{3,11},{4,12},{5,13},"
+        "{6,14},{7,15}}, dimensions={0}\n"
+        "}\n")
     st = pod_crossing_stats(hlo, pod_size=8)
     assert st.intra_pod_ops == 1 and st.cross_pod_ops == 1
     assert st.intra_pod_bytes == 32.0          # s32[8]
