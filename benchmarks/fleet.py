@@ -1,0 +1,188 @@
+"""Fleet regime: multi-tenant serving on one shared store + mesh.
+
+Three phases through one ``JoinFleet`` (sharded engine — the mesh the
+band-step scheduler interleaves on):
+
+  * **dedup** — tenant 0 pays the cold query; tenant 1's cold query over
+    the SAME corpus must charge $0 extraction and move 0 plane bytes H2D
+    (content-hash plane dedup + PlanLibrary plan dedup), returning pairs
+    identical to tenant 0's.  Gate: zero-baseline fields must stay zero.
+  * **serial** — every stream's queries run warm at concurrency 1: the
+    K× per-query baseline.
+  * **concurrent** — the same query streams submitted together, admitted
+    round-robin across tenants onto ``max_concurrent`` workers, band
+    steps interleaved on the mesh by the fleet scheduler.  Acceptance:
+    aggregate wall strictly below the serial aggregate (interleaving
+    actually overlapped oracle waits and device work), scheduler
+    ``interleaves`` > 0 (steps really alternated queries), and every
+    stream's observed recall holds its floor.
+
+The oracle runs with a small simulated API latency
+(``SimulatedOracle.latency_s``): refinement waits release the GIL the
+way a real L_p backend's round-trips do, so the serial-vs-concurrent
+comparison measures the overlap the fleet actually buys in deployment
+rather than a pure-Python GIL fight.  Latency never changes answers or
+dollar charges.
+
+Reported rows are gated by ``benchmarks/run.py``: p50/p99 latency are
+wall-banded ceilings, ``cost_per_query`` is dollar-banded, ``recall`` is
+a floor, and the dedup phase's extraction/H2D are zero-invariants.
+
+Usage:  PYTHONPATH=src python -m benchmarks.run --fast --only fleet
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.join import FDJConfig
+from repro.data import synth
+from repro.obs.metrics import MetricsRegistry
+from repro.serving.fleet import JoinFleet
+
+# interpret-mode tiles, as in the serving regime; small bands give each
+# query several band steps for the scheduler to interleave
+_SHARDED_OPTS = dict(tl=32, tr=32, r_chunk=64)
+
+# simulated L_p round-trip per labeled pair (see module docstring)
+_ORACLE_LATENCY_S = 3e-4
+
+
+def run(fast: bool = True):
+    n_tenants = 4 if fast else 10
+    streams_per_tenant = 3 if fast else 25        # non-fast: 250 streams
+    queries_per_stream = 2
+    concurrency = 4 if fast else 8
+    n = 40 if fast else 60
+
+    ds = synth.movies_pages(n_movies=n, cast_size=4, filler_sentences=1,
+                            seed=0)
+    cfg = FDJConfig(engine="sharded", engine_opts=dict(_SHARDED_OPTS),
+                    seed=0, mc_trials=6000)
+    fleet = JoinFleet(max_concurrent=concurrency)
+    for t in range(n_tenants):
+        fleet.add_tenant(
+            f"t{t}", ds, cfg,
+            oracle_factory=lambda: ds.make_oracle(_ORACLE_LATENCY_S))
+
+    rows = []
+
+    # --- phase 1: shared-corpus dedup --------------------------------------
+    cold = fleet.query("t0")
+    rows.append({"phase": "cold_first_tenant",
+                 "wall_s": round(cold.wall_s, 4),
+                 "extraction_cost": cold.cost.inference,
+                 "bytes_to_device": cold.cost.bytes_h2d,
+                 "pairs": len(cold.pairs),
+                 "recall": round(cold.join.recall, 4)})
+    second = fleet.query("t1")
+    assert second.cost.inference == 0.0, \
+        f"second tenant's cold query charged ${second.cost.inference} " \
+        f"extraction over a shared corpus"
+    assert second.cost.bytes_h2d == 0, \
+        f"second tenant's cold query moved {second.cost.bytes_h2d} plane " \
+        f"bytes H2D over a shared corpus"
+    assert second.cost.labeling == 0.0 and second.cost.construction == 0.0, \
+        "second tenant re-paid planning despite the shared PlanLibrary"
+    assert second.cost.plane_dedup_hits > 0, \
+        "second tenant's plane hits were not attributed as dedup"
+    assert second.pairs == cold.pairs, \
+        "shared-corpus tenants disagree on the join result"
+    rows.append({"phase": "dedup_second_tenant",
+                 "wall_s": round(second.wall_s, 4),
+                 "extraction_cost": second.cost.inference,
+                 "bytes_to_device": second.cost.bytes_h2d,
+                 "plan_cost": second.cost.labeling + second.cost.construction,
+                 "dedup_hits": second.cost.plane_dedup_hits,
+                 "pairs": len(second.pairs),
+                 "agrees_with_first": True,
+                 "recall": round(second.join.recall, 4)})
+    print(f"fleet,dedup,second_tenant_extraction=$0.0000,bytes_h2d=0,"
+          f"dedup_hits={second.cost.plane_dedup_hits},"
+          f"agrees_with_first=True")
+
+    # warm every remaining tenant once (all dedup against the residents)
+    for t in range(2, n_tenants):
+        fleet.query(f"t{t}")
+
+    tenants = fleet.tenants
+    n_streams = n_tenants * streams_per_tenant
+    n_queries = n_streams * queries_per_stream
+
+    # --- phase 2: serial baseline (concurrency 1, warm) --------------------
+    t0 = time.perf_counter()
+    for s in range(streams_per_tenant):
+        for name in tenants:
+            for _ in range(queries_per_stream):
+                r = fleet.query(name)
+                assert r.cost.inference == 0.0
+    serial_wall = time.perf_counter() - t0
+    rows.append({"phase": "serial", "concurrency": 1,
+                 "streams": n_streams, "queries": n_queries,
+                 "wall_s": round(serial_wall, 4),
+                 "per_query_wall_s": round(serial_wall / n_queries, 5)})
+    print(f"fleet,serial,streams={n_streams},queries={n_queries},"
+          f"wall_s={serial_wall:.3f}")
+
+    # --- phase 3: concurrent streams ---------------------------------------
+    sched = fleet.scheduler
+    steps0, inter0 = sched.band_steps, sched.interleaves
+    lat = MetricsRegistry()            # phase-scoped latency histogram
+    t0 = time.perf_counter()
+    futures = [fleet.submit(name)
+               for s in range(streams_per_tenant)
+               for name in tenants
+               for _ in range(queries_per_stream)]
+    results = [f.result() for f in futures]
+    concurrent_wall = time.perf_counter() - t0
+    fleet.drain()
+    interleaves = sched.interleaves - inter0
+    band_steps = sched.band_steps - steps0
+
+    min_recall, total_cost = 1.0, 0.0
+    for r in results:
+        assert r.cost.inference == 0.0, \
+            "a concurrent warm stream re-paid extraction"
+        assert r.pairs == cold.pairs, \
+            "a concurrent stream diverged from the serial result"
+        min_recall = min(min_recall, r.join.recall)
+        total_cost += r.cost.total
+        lat.observe("fleet.query_wall_s", r.wall_s)
+    hist = lat.histogram("fleet.query_wall_s")
+
+    assert concurrent_wall < serial_wall, \
+        f"{concurrency}-way concurrent streams took {concurrent_wall:.3f}s " \
+        f">= the serial aggregate {serial_wall:.3f}s: band-step " \
+        f"interleaving bought no overlap"
+    assert interleaves > 0, \
+        "no band step was ever granted to a different query than its " \
+        "predecessor: the scheduler never interleaved"
+
+    rows.append({"phase": "concurrent", "concurrency": concurrency,
+                 "streams": n_streams, "queries": n_queries,
+                 "wall_s": round(concurrent_wall, 4),
+                 "speedup_vs_serial": round(serial_wall / concurrent_wall, 3),
+                 "p50_wall_s": round(hist.quantile(0.5), 5),
+                 "p99_wall_s": round(hist.quantile(0.99), 5),
+                 "cost_per_query": total_cost / n_queries,
+                 "recall": round(min_recall, 4),
+                 "band_steps": band_steps,
+                 "interleaved": interleaves > 0,
+                 "agrees_with_serial": True})
+    print(f"fleet,concurrent,streams={n_streams},conc={concurrency},"
+          f"wall_s={concurrent_wall:.3f},"
+          f"speedup={serial_wall / concurrent_wall:.2f}x,"
+          f"interleaves={interleaves},min_recall={min_recall:.3f},"
+          f"cost_per_query=${total_cost / n_queries:.4f}")
+    fleet.close()
+    return rows
+
+
+def main(fast: bool):
+    from benchmarks.run import _emit
+    rows = run(fast)
+    _emit(rows, "fleet")
+
+
+if __name__ == "__main__":
+    main(fast=True)

@@ -18,6 +18,13 @@
 #   calibration: serving-time guarantee regime (§4a) — scripted
 #             distribution-shifting append; FAILS CI if the recalibrated
 #             path's observed recall drops below the target
+#   fleet:    multi-tenant regime (§8a) — shared-corpus plane/plan dedup
+#             ($0 extraction + 0 plane H2D for the second tenant, gated as
+#             zero invariants), then serial-vs-concurrent query streams:
+#             FAILS CI if the concurrent aggregate wall is not strictly
+#             below the serial aggregate, no band step ever interleaved,
+#             or any stream's observed recall drops below its floor
+#             (p50/p99 latency ride the wall band in the gate)
 #   trace:    small traced sharded join (prefetch ring depth 2) exported
 #             as Perfetto trace-event JSON; launch/trace_report --check
 #             gates the schema and the span-vs-ledger reconciliation
@@ -68,9 +75,9 @@ fi
 echo "== tier-1: fast test subset =="
 python -m pytest -q -m "not slow"
 
-echo "== smoke benchmarks + regression gate (engines incl. multipod dry-run, pipeline, serving, calibration) =="
+echo "== smoke benchmarks + regression gate (engines incl. multipod dry-run, pipeline, serving, calibration, fleet) =="
 python -m benchmarks.run --fast --strict \
-    --only engines,pipeline,serving,calibration \
+    --only engines,pipeline,serving,calibration,fleet \
     --check-against benchmarks/baseline
 
 echo "== traced join: Perfetto export + schema/ledger reconciliation gate =="

@@ -46,6 +46,7 @@ FIELD_METRICS = {
     "step2_conjunct_evals": "engine.conjunct_evals",
     "plane_hits": "planes.hits",
     "plane_misses": "planes.misses",
+    "plane_dedup_hits": "planes.dedup_hits",
     "plane_evicted_bytes": "planes.evicted_bytes",
     "bytes_h2d": "planes.bytes_h2d",
     "bytes_reshard": "planes.bytes_reshard",
@@ -90,6 +91,8 @@ class CostLedger:
     # hit costs $0; reported via serving_summary(), kept out of total.
     plane_hits: int = 0          # (spec, side) planes served device-resident
     plane_misses: int = 0        # planes that had to be extracted + uploaded
+    plane_dedup_hits: int = 0    # hits on planes another tenant materialized
+                                 # (shared-store fleet: the $0 dedup proof)
     plane_evicted_bytes: int = 0 # device bytes freed by LRU eviction
     plane_resident_bytes: int = 0  # device bytes pinned after the query
     bytes_h2d: int = 0           # host->device plane bytes actually moved
@@ -186,11 +189,13 @@ class CostLedger:
 
     def record_plane_traffic(self, *, hits: int = 0, misses: int = 0,
                              evicted_bytes: int = 0, resident_bytes: int = 0,
-                             bytes_h2d: int = 0, bytes_reshard: int = 0):
+                             bytes_h2d: int = 0, bytes_reshard: int = 0,
+                             dedup_hits: int = 0):
         """Accumulate plane-store counters (resident_bytes is a level, not a
         flow: callers pass the store's current value and it overwrites)."""
         self._flow("plane_hits", int(hits))
         self._flow("plane_misses", int(misses))
+        self._flow("plane_dedup_hits", int(dedup_hits))
         self._flow("plane_evicted_bytes", int(evicted_bytes))
         self._set_resident(resident_bytes)
         self._flow("bytes_h2d", int(bytes_h2d))
@@ -223,6 +228,7 @@ class CostLedger:
         return {
             "plane_hits": self.plane_hits,
             "plane_misses": self.plane_misses,
+            "plane_dedup_hits": self.plane_dedup_hits,
             "plane_evicted_bytes": self.plane_evicted_bytes,
             "plane_resident_bytes": self.plane_resident_bytes,
             "bytes_h2d": self.bytes_h2d,

@@ -96,6 +96,81 @@ class FDJConfig:
     reservoir_cap: int = 4096      # max labeled reservoir pairs per plan
     seed: int = 0
 
+    def with_overrides(self, **overrides) -> "FDJConfig":
+        """A copy with ``overrides`` applied — the one sanctioned way to
+        derive a per-query config from a base config (``QueryOptions``
+        resolves through here).  Unknown field names raise immediately
+        instead of silently vanishing into ``dataclasses.replace``'s
+        error text at some downstream call site."""
+        unknown = set(overrides) - {f.name for f in dataclasses.fields(self)}
+        if unknown:
+            raise TypeError(
+                f"unknown FDJConfig field(s) {sorted(unknown)}; valid "
+                f"fields: {sorted(f.name for f in dataclasses.fields(self))}")
+        return dataclasses.replace(self, **overrides)
+
+
+# QueryOptions field -> FDJConfig field it overrides (``stream`` is the
+# historical serving spelling of ``stream_refinement``)
+_OPT_CFG_FIELDS = {
+    "engine": "engine",
+    "stream": "stream_refinement",
+    "recall_target": "recall_target",
+    "precision_target": "precision_target",
+    "delta": "delta",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryOptions:
+    """One typed request against a serving surface (DESIGN.md §8).
+
+    This is the single options path shared by ``JoinService.query``,
+    ``JoinService.append_right`` and ``JoinFleet.submit`` — it replaces
+    the historical five special-cased kwargs + open-ended
+    ``**cfg_overrides`` sprawl (kept alive as deprecation shims that
+    route through here, parity-tested byte-identical).
+
+    The five named fields are the common per-request knobs; anything else
+    an ``FDJConfig`` carries goes through ``overrides`` (validated by
+    ``FDJConfig.with_overrides``, so typos raise at submit time, not at
+    some engine call site).  ``refresh_plan`` / ``incremental`` are
+    serving execution directives, not config: they never enter the plan
+    key."""
+    engine: Optional[str] = None          # numpy | pallas | sharded
+    stream: Optional[bool] = None         # pipeline refinement over step ②
+    recall_target: Optional[float] = None
+    precision_target: Optional[float] = None
+    delta: Optional[float] = None
+    refresh_plan: bool = False            # drop the cached plan, re-plan
+    incremental: bool = True              # allow the delta-join fast path
+    overrides: dict = dataclasses.field(default_factory=dict)
+    #   any further FDJConfig fields (mc_trials, engine_opts, seed, ...)
+
+    @classmethod
+    def from_legacy(cls, *, refresh_plan: bool = False,
+                    incremental: bool = True, **kw) -> "QueryOptions":
+        """Adapter for the pre-fleet kwarg surface: the five named kwargs
+        map onto typed fields, everything else lands in ``overrides``."""
+        named = {k: kw.pop(k) for k in list(kw)
+                 if k in _OPT_CFG_FIELDS and k != "stream"}
+        if "stream" in kw:
+            named["stream"] = kw.pop("stream")
+        return cls(refresh_plan=refresh_plan, incremental=incremental,
+                   overrides=kw, **named)
+
+    def resolve(self, base: FDJConfig) -> FDJConfig:
+        """The effective per-request config: ``base`` with this request's
+        named fields and ``overrides`` applied (named fields win)."""
+        merged = dict(self.overrides)
+        for opt_field, cfg_field in _OPT_CFG_FIELDS.items():
+            v = getattr(self, opt_field)
+            if v is not None:
+                merged[cfg_field] = v
+        if not merged:
+            return base
+        return base.with_overrides(**merged)
+
 
 @dataclasses.dataclass
 class JoinPlan:

@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import time
 from typing import Callable, Optional, Sequence
 
 import numpy as np
@@ -35,6 +36,13 @@ class SimulatedOracle(Oracle):
 
     ``truth(i, j) -> bool`` resolves against dataset ground truth;
     texts_l/texts_r used only to build (and price) the prompt.
+
+    ``latency_s`` models the API round-trip of the L_p backend: each
+    ``label_pairs`` batch sleeps ``latency_s`` per pair, once, after
+    labeling.  The sleep releases the GIL — exactly the wait a real
+    deployment overlaps across concurrent queries, which is what makes
+    the fleet's concurrent-vs-serial wall comparison honest instead of
+    a pure-Python GIL fight.  Answers and dollar charges are unaffected.
     """
     texts_l: Sequence[str]
     texts_r: Sequence[str]
@@ -42,6 +50,7 @@ class SimulatedOracle(Oracle):
     join_prompt: str = "Do {l} and {r} satisfy the join condition? Answer yes or no."
     ledger: CostLedger = dataclasses.field(default_factory=CostLedger)
     calls: int = 0
+    latency_s: float = 0.0
 
     def label_pairs(self, pairs, kind: str = "labeling") -> np.ndarray:
         out = np.zeros(len(pairs), dtype=bool)
@@ -54,6 +63,8 @@ class SimulatedOracle(Oracle):
                 self.ledger.charge_refine(tok)
             out[n] = bool(self.truth(i, j))
             self.calls += 1
+        if self.latency_s and pairs:
+            time.sleep(self.latency_s * len(pairs))
         return out
 
 

@@ -62,9 +62,10 @@ class JoinDataset:
     def truth(self, i: int, j: int) -> bool:
         return (i, j) in self.truth_set
 
-    def make_oracle(self) -> SimulatedOracle:
+    def make_oracle(self, latency_s: float = 0.0) -> SimulatedOracle:
         return SimulatedOracle(self.texts_l, self.texts_r, self.truth,
-                               join_prompt=self.join_prompt + " {l} ||| {r}")
+                               join_prompt=self.join_prompt + " {l} ||| {r}",
+                               latency_s=latency_s)
 
 
 # ---------------------------------------------------------------------------

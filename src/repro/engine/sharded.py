@@ -96,7 +96,9 @@ lowers onto the (16, 16) / (2, 16, 16) production meshes from
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
+import threading
 import time
 from typing import Optional
 
@@ -127,14 +129,16 @@ class _InFlight:
 
 
 _HOST_MESH = None                      # shared default mesh: stable cache key
+_HOST_MESH_LOCK = threading.Lock()     # fleet: engines resolve it concurrently
 
 
 def _default_mesh():
     global _HOST_MESH
-    if _HOST_MESH is None:
-        from repro.distributed.mesh import make_host_mesh
-        _HOST_MESH = make_host_mesh()
-    return _HOST_MESH
+    with _HOST_MESH_LOCK:
+        if _HOST_MESH is None:
+            from repro.distributed.mesh import make_host_mesh
+            _HOST_MESH = make_host_mesh()
+        return _HOST_MESH
 
 
 def _mesh_geometry(mesh):
@@ -156,7 +160,8 @@ class ShardedEngine(CnfEngine):
                  interpret: Optional[bool] = None, use_kernel: bool = True,
                  double_buffer: bool = True,
                  prefetch_depth: Optional[int] = None,
-                 early_reject: bool = True):
+                 early_reject: bool = True,
+                 scheduler=None):
         """mesh: any mesh with a "data" axis and optional "pod" / "model"
         axes.  When None, the mesh is resolved *per evaluation* — the
         plane set's attached mesh, else make_host_mesh() — so one engine
@@ -174,7 +179,14 @@ class ShardedEngine(CnfEngine):
         double_buffer=False is the legacy spelling of prefetch_depth=1
         (an explicit prefetch_depth wins).  early_reject=False disables
         the conjunct short-circuit — full-width CNF on every band, the
-        A/B control the conjunct_evals gate compares against."""
+        A/B control the conjunct_evals gate compares against.
+        scheduler: the cross-query band-step gate (serving/fleet.py
+        ``BandScheduler``).  When set, every band-step *enqueue* runs
+        under ``scheduler.step()`` — a fleet running several queries on
+        one mesh interleaves their band steps in admission order instead
+        of letting one query's whole sweep monopolize the device queue.
+        Only dispatch is gated; pulls/filtering proceed ungated, so one
+        query's host work overlaps another's device compute."""
         if tr % 32 != 0:
             raise ValueError(f"tr={tr} must be a multiple of 32 (packed mask)")
         self.mesh = mesh
@@ -195,6 +207,7 @@ class ShardedEngine(CnfEngine):
                 f"prefetch_depth={prefetch_depth} must be >= 1 (1 = serial)")
         self.prefetch_depth = int(prefetch_depth) if prefetch_depth else None
         self.early_reject = bool(early_reject)
+        self.scheduler = scheduler
         # diagnostics only (tests, the dry-run report): the per-shard
         # capacities the most recent sweep ended at.  Not config — the
         # next evaluation starts from ``self.capacity`` again.
@@ -223,6 +236,11 @@ class ShardedEngine(CnfEngine):
     # process lifetime.
     _programs: dict = {}               # build key -> jitted shard_map program
     _PROGRAM_CACHE_MAX = 32
+    # fleet: concurrent queries dispatch through per-query engines that all
+    # share this class-level cache; the lock covers lookup + LRU reorder +
+    # insert (held through a cold compile too, so two threads racing the
+    # same key compile once, not twice)
+    _programs_lock = threading.Lock()
 
     def _resolve_r_chunk(self, n_model: int) -> int:
         r_chunk = self.r_chunk if self.r_chunk else 4 * self.tr * n_model
@@ -248,20 +266,22 @@ class ShardedEngine(CnfEngine):
         key = (mesh, kclauses, thetas, rows_shard, cap, r_chunk, n_chunks,
                self.tl, self.tr, self.use_kernel, interpret,
                self.early_reject)
-        cached = ShardedEngine._programs.get(key)
-        if cached is not None:
-            # LRU, not FIFO: re-insert on hit so eviction tracks recency —
-            # a hot serving program must survive any number of one-off
-            # joins churning the other slots (dict preserves insert order)
-            ShardedEngine._programs.pop(key)
-            ShardedEngine._programs[key] = cached
-            return cached
-        fn = self._build_uncached(mesh, kclauses, thetas, rows_shard, cap,
-                                  r_chunk, n_chunks, interpret)
-        while len(ShardedEngine._programs) >= self._PROGRAM_CACHE_MAX:
-            ShardedEngine._programs.pop(next(iter(ShardedEngine._programs)))
-        ShardedEngine._programs[key] = fn
-        return fn
+        with ShardedEngine._programs_lock:
+            cached = ShardedEngine._programs.get(key)
+            if cached is not None:
+                # LRU, not FIFO: re-insert on hit so eviction tracks recency —
+                # a hot serving program must survive any number of one-off
+                # joins churning the other slots (dict preserves insert order)
+                ShardedEngine._programs.pop(key)
+                ShardedEngine._programs[key] = cached
+                return cached
+            fn = self._build_uncached(mesh, kclauses, thetas, rows_shard, cap,
+                                      r_chunk, n_chunks, interpret)
+            while len(ShardedEngine._programs) >= self._PROGRAM_CACHE_MAX:
+                ShardedEngine._programs.pop(
+                    next(iter(ShardedEngine._programs)))
+            ShardedEngine._programs[key] = fn
+            return fn
 
     def _build_uncached(self, mesh, kclauses, thetas, rows_shard, cap,
                         r_chunk, n_chunks, interpret):
@@ -382,14 +402,20 @@ class ShardedEngine(CnfEngine):
         unit_pairs = (self.tl * self.tr if self.use_kernel
                       else rows_shard * (r_chunk // n_model))
 
+        sched = self.scheduler
+
         def dispatch(k) -> _InFlight:
             """Enqueue band step k at the current uniform capacity (JAX
-            async dispatch: returns futures, no host sync)."""
+            async dispatch: returns futures, no host sync).  Under a fleet
+            scheduler the enqueue itself is the scheduling point: steps
+            from concurrent queries take turns in ticket order."""
             cap = int(caps.max())
             t0 = time.perf_counter()
-            fn = self._build(mesh, kclauses, thetas, rows_shard, cap,
-                             r_chunk, n_chunks)
-            buf, cnt, base, evals = fn(*args, jnp.int32(k))
+            with sched.step() if sched is not None \
+                    else contextlib.nullcontext():
+                fn = self._build(mesh, kclauses, thetas, rows_shard, cap,
+                                 r_chunk, n_chunks)
+                buf, cnt, base, evals = fn(*args, jnp.int32(k))
             timing["dispatch"] += time.perf_counter() - t0
             return _InFlight(k, cap, buf, cnt, base, evals, t_enq=t0)
 

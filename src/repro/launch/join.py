@@ -19,9 +19,9 @@ from typing import Optional
 
 from repro.core.costs import naive_join_cost
 from repro.core.join import FDJConfig, fdj_join
-from repro.data import synth
 from repro.data.simulated_llm import SimulatedExtractor, SimulatedProposer
-from repro.engine import ENGINES
+from repro.launch._args import (add_common_flags, engine_opts_from,
+                                make_dataset)
 from repro.obs import Tracer, use_tracer, write_trace
 
 
@@ -32,22 +32,13 @@ def run_join(dataset: str = "police_records", target: float = 0.9,
              prefetch_depth: Optional[int] = None,
              r_chunk: Optional[int] = None,
              trace_out: Optional[str] = None) -> dict:
-    gens = {
-        "police_records": lambda: synth.police_records(
-            n_incidents=int(300 * size), reports_per_incident=3, seed=seed),
-        "citations": lambda: synth.citations(n_docs=int(900 * size), seed=seed),
-        "movies": lambda: synth.movies_pages(n_movies=int(400 * size), seed=seed),
-        "products": lambda: synth.products(n_products=int(700 * size), seed=seed),
-        "categorize": lambda: synth.categorize(n_items=int(2000 * size), seed=seed),
-        "biodex": lambda: synth.biodex(n_notes=int(1500 * size), seed=seed),
-    }
-    ds = gens[dataset]()
+    ds = make_dataset(dataset, size=size, seed=seed)
     oracle = ds.make_oracle()
     cfg = FDJConfig(recall_target=target, delta=delta, engine=engine,
                     precision_target=precision_target, seed=seed,
                     stream_refinement=stream, pods=pods,
                     prefetch_depth=prefetch_depth,
-                    engine_opts={"r_chunk": r_chunk} if r_chunk else {})
+                    engine_opts=engine_opts_from(r_chunk))
     tracer = Tracer() if trace_out else None
     with use_tracer(tracer):
         res = fdj_join(ds, oracle, SimulatedProposer(ds),
@@ -111,33 +102,13 @@ def build_join_cell(mesh, *, n_l: int = 262144, n_r: int = 262144,
 
 
 def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--dataset", default="police_records")
-    ap.add_argument("--target", type=float, default=0.9)
-    ap.add_argument("--delta", type=float, default=0.1)
+    ap = add_common_flags(argparse.ArgumentParser())
     ap.add_argument("--precision-target", type=float, default=1.0)
-    ap.add_argument("--engine", default="numpy", choices=list(ENGINES))
-    ap.add_argument("--stream", action="store_true",
-                    help="pipeline refinement over the step-② candidate "
-                         "stream (FDJConfig.stream_refinement)")
     ap.add_argument("--pods", type=int, default=1,
                     help="pod-axis width for the sharded engine's 3-D "
                          "(pod, data, model) join mesh (FDJConfig.pods; "
                          "needs enough devices — see launch/multipod_dryrun "
                          "for the emulated (2, 16, 16) dry-run)")
-    ap.add_argument("--size", type=float, default=1.0)
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--prefetch-depth", type=int, default=None,
-                    help="sharded engine: band steps in flight at once "
-                         "(FDJConfig.prefetch_depth; 1 = serial)")
-    ap.add_argument("--r-chunk", type=int, default=None,
-                    help="R-band width in columns (engine_opts; smaller = "
-                         "more band steps, e.g. to exercise the prefetch "
-                         "ring on a small corpus)")
-    ap.add_argument("--trace-out", default=None, metavar="FILE",
-                    help="write a Perfetto/Chrome trace-event JSON of the "
-                         "run (load in ui.perfetto.dev, or summarize with "
-                         "python -m repro.launch.trace_report FILE)")
     args = ap.parse_args()
     out = run_join(args.dataset, args.target, args.delta,
                    args.precision_target, args.engine, args.size, args.seed,

@@ -23,25 +23,20 @@ from __future__ import annotations
 import argparse
 import json
 
-from repro.core.join import FDJConfig
-from repro.data import synth
-from repro.engine import ENGINES
+from repro.core.join import FDJConfig, QueryOptions
+from repro.launch._args import (add_common_flags, engine_opts_from,
+                                make_dataset)
 from repro.obs import Tracer, use_tracer, write_trace
 from repro.serving.join_service import DeltaRows, JoinService, hold_out_right
 from repro.serving.planes import FeaturePlaneStore
 
+# serving launchers run half the one-shot launcher's corpus scale: many
+# queries per run, same wall budget
+SERVE_SCALE = 0.5
+
 
 def _dataset(name: str, size: float, seed: int):
-    gens = {
-        "police_records": lambda: synth.police_records(
-            n_incidents=int(150 * size), reports_per_incident=3, seed=seed),
-        "citations": lambda: synth.citations(n_docs=int(450 * size), seed=seed),
-        "movies": lambda: synth.movies_pages(n_movies=int(200 * size), seed=seed),
-        "products": lambda: synth.products(n_products=int(350 * size), seed=seed),
-        "categorize": lambda: synth.categorize(n_items=int(1000 * size), seed=seed),
-        "biodex": lambda: synth.biodex(n_notes=int(750 * size), seed=seed),
-    }
-    return gens[name]()
+    return make_dataset(name, size=size, seed=seed, scale=SERVE_SCALE)
 
 
 def _take_delta(pool: DeltaRows, k: int, base_n: int):
@@ -78,7 +73,7 @@ def run_serve(dataset: str = "police_records", engine: str = "numpy",
               stream: bool = False, size: float = 1.0, target: float = 0.9,
               delta: float = 0.1, holdout: int = 0,
               script: str = "query,query", seed: int = 0,
-              byte_budget=None, engine_opts=None,
+              byte_budget=None, engine_opts=None, prefetch_depth=None,
               trace_out=None) -> dict:
     ds = _dataset(dataset, size, seed)
     pool = None
@@ -86,6 +81,7 @@ def run_serve(dataset: str = "police_records", engine: str = "numpy",
         ds, pool = hold_out_right(ds, holdout)
     cfg = FDJConfig(recall_target=target, delta=delta, engine=engine,
                     stream_refinement=stream, seed=seed,
+                    prefetch_depth=prefetch_depth,
                     engine_opts=engine_opts or {})
     svc = JoinService(ds, cfg, store=FeaturePlaneStore(byte_budget))
     tracer = Tracer() if trace_out else None
@@ -130,7 +126,10 @@ def _run_script(svc: JoinService, script: str, pool) -> list:
                   "bytes_to_device": info["store"]["bytes_to_device"],
                   "n_r": svc.dataset.n_r}
         elif name in ("query", "replan"):
-            r = svc.query(refresh_plan=(name == "replan"), **kw)
+            # the typed request surface (DESIGN.md §8): script modifiers
+            # become one QueryOptions, same shape JoinFleet.submit takes
+            r = svc.query(QueryOptions.from_legacy(
+                refresh_plan=(name == "replan"), **kw))
             st = r.store
             looked = st["hits"] + st["misses"]
             ev = {"op": raw, "recall": round(r.join.recall, 4),
@@ -149,27 +148,17 @@ def _run_script(svc: JoinService, script: str, pool) -> list:
 
 
 def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--dataset", default="police_records")
-    ap.add_argument("--engine", default="numpy", choices=list(ENGINES))
-    ap.add_argument("--stream", action="store_true")
-    ap.add_argument("--size", type=float, default=1.0)
-    ap.add_argument("--target", type=float, default=0.9)
-    ap.add_argument("--delta", type=float, default=0.1)
+    ap = add_common_flags(argparse.ArgumentParser())
     ap.add_argument("--holdout", type=int, default=0,
                     help="R rows held back for append ops")
     ap.add_argument("--script", default="query,query")
     ap.add_argument("--byte-budget", type=int, default=None,
                     help="plane-store device byte budget (LRU eviction)")
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--trace-out", default=None, metavar="FILE",
-                    help="write a Perfetto/Chrome trace-event JSON of the "
-                         "whole script run (per-query span trees; summarize "
-                         "with python -m repro.launch.trace_report FILE)")
     args = ap.parse_args()
     run_serve(args.dataset, args.engine, args.stream, args.size, args.target,
               args.delta, args.holdout, args.script, args.seed,
-              args.byte_budget, trace_out=args.trace_out)
+              args.byte_budget, engine_opts=engine_opts_from(args.r_chunk),
+              prefetch_depth=args.prefetch_depth, trace_out=args.trace_out)
 
 
 if __name__ == "__main__":

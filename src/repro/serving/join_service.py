@@ -56,9 +56,14 @@ off in ``FDJConfig`` for the historical carry-forward behavior.
 
 from __future__ import annotations
 
+import contextlib
+import copy
 import dataclasses
 import math
+import threading
 import time
+import warnings
+from collections import OrderedDict
 from typing import Callable, Optional
 
 import jax.numpy as jnp
@@ -67,8 +72,8 @@ import numpy as np
 from repro.core.adj_target import adj_target
 from repro.core.costs import CostLedger
 from repro.core.featurize import distance_stack, vectorize
-from repro.core.join import (FDJConfig, JoinPlan, JoinResult, _get_engine,
-                             apply_conjunct_order, execute_join,
+from repro.core.join import (FDJConfig, JoinPlan, JoinResult, QueryOptions,
+                             _get_engine, apply_conjunct_order, execute_join,
                              make_label_fn, plan_join)
 from repro.core.scaffold import min_fpr_thresholds, ordered_conjuncts
 from repro.core.refine import RefinementPump
@@ -181,6 +186,64 @@ def _plane_scales(planes) -> tuple:
     return tuple(f.scale if f.kind == "scalar" else None for f in planes)
 
 
+class PlanLibrary:
+    """Cross-tenant plan dedup for the fleet (DESIGN.md §8a).
+
+    ``plan_join`` is deterministic in (corpus, cfg, seed) — the basis of
+    the per-service plan cache — so two tenants planning the same corpus
+    under the same plan key would rebuild byte-identical plans, re-paying
+    sampling, generation and threshold labeling.  The library memoizes
+    plans by (fp_l, fp_r, plan key) across services sharing it: the
+    second tenant's cold query charges $0 for steps ①–⑥, completing the
+    shared-store story (planes dedup step ⑦; this dedups ①–⑥).
+
+    Plans are mutable serving state (recalibration hot-swaps theta), so
+    the library never shares an object: it stores a snapshot on ``put``
+    and loans a deep copy on ``get`` — one tenant's theta swap can never
+    bleed into another's guarantee.  LRU-bounded, lock-guarded.
+
+    ``lease(key)`` serializes cold planning per key (the analogue of the
+    store lock held through ``provide``): two tenants racing the same
+    cold (corpus, plan key) plan once — the loser wakes to a library hit.
+    """
+
+    _MAX = 32
+
+    def __init__(self):
+        self._plans: OrderedDict = OrderedDict()
+        self._lock = threading.Lock()
+        self._leases: dict = {}        # key -> per-key planning lock
+        self.hits = 0
+        self.misses = 0
+
+    @contextlib.contextmanager
+    def lease(self, key: tuple):
+        with self._lock:
+            lk = self._leases.setdefault(key, threading.Lock())
+        with lk:
+            yield
+
+    def get(self, key: tuple) -> Optional[JoinPlan]:
+        with self._lock:
+            plan = self._plans.get(key)
+            if plan is None:
+                self.misses += 1
+                return None
+            self.hits += 1
+            self._plans.move_to_end(key)
+            return copy.deepcopy(plan)
+
+    def put(self, key: tuple, plan: JoinPlan) -> None:
+        with self._lock:
+            self._plans[key] = copy.deepcopy(plan)
+            self._plans.move_to_end(key)
+            while len(self._plans) > self._MAX:
+                self._plans.popitem(last=False)
+            for k in [k for k in self._leases
+                      if k not in self._plans and not self._leases[k].locked()]:
+                del self._leases[k]    # don't leak locks for evicted keys
+
+
 class JoinService:
     """Serve repeated ``fdj_join`` queries against one (growing) corpus.
 
@@ -192,16 +255,30 @@ class JoinService:
     """
 
     _EVAL_CACHE_MAX = 8            # candidate lists retained for delta joins
+    _PLAN_CACHE_MAX = 16           # cached plans (LRU, same discipline the
+    #   sharded engine's _programs got in PR 7): a long-lived tenant with
+    #   rotating configs must not leak plans + their reservoirs unboundedly
 
     def __init__(self, dataset, cfg: Optional[FDJConfig] = None, *,
                  store: Optional[FeaturePlaneStore] = None,
                  extractor_factory: Optional[Callable] = None,
-                 proposer_factory: Optional[Callable] = None):
+                 proposer_factory: Optional[Callable] = None,
+                 tenant: Optional[str] = None,
+                 plan_library: Optional[PlanLibrary] = None,
+                 oracle_factory: Optional[Callable] = None):
         from repro.data.simulated_llm import (SimulatedExtractor,
                                               SimulatedProposer)
         self.dataset = dataset
         self.cfg = cfg or FDJConfig()
         self.store = store or FeaturePlaneStore()
+        self.tenant = tenant       # fleet identity: store-ownership and
+        #   fair-eviction attribution for every plane this service touches
+        self._plan_library = plan_library  # cross-tenant plan dedup (fleet)
+        # late-bound: append_right swaps self.dataset for the grown corpus,
+        # and the default oracle must follow it (a custom factory that
+        # closes over a dataset owns that tracking itself)
+        self._oracle_factory = oracle_factory or \
+            (lambda: self.dataset.make_oracle())
         self._extractor_factory = extractor_factory or \
             (lambda ds: SimulatedExtractor(ds, seed=self.cfg.seed))
         self._proposer_factory = proposer_factory or \
@@ -235,32 +312,54 @@ class JoinService:
     def _provider(self, extractor) -> Callable:
         def provide(specs, ledger):
             return self.store.provide(specs, extractor, ledger,
-                                      fp_l=self._fp_l, fp_r=self._fp_r)
+                                      fp_l=self._fp_l, fp_r=self._fp_r,
+                                      tenant=self.tenant)
         return provide
+
+    @staticmethod
+    def _coerce_options(options, legacy: dict) -> QueryOptions:
+        """The one options path (DESIGN.md §8): a ``QueryOptions`` is used
+        as-is; the historical kwarg surface (five special-cased kwargs +
+        open-ended ``**cfg_overrides``) is a deprecation shim that routes
+        through ``QueryOptions.from_legacy`` — parity-tested
+        byte-identical in tests/test_query_options.py."""
+        legacy = {k: v for k, v in legacy.items() if v is not None}
+        if options is not None:
+            if legacy:
+                raise TypeError(
+                    f"pass either options=QueryOptions(...) or legacy "
+                    f"kwargs, not both (got {sorted(legacy)})")
+            return options
+        if legacy:
+            warnings.warn(
+                "JoinService per-query kwargs are deprecated; pass "
+                "options=QueryOptions(...) instead", DeprecationWarning,
+                stacklevel=3)
+        return QueryOptions.from_legacy(**legacy)
 
     # -- queries ------------------------------------------------------------
 
-    def query(self, *, engine: Optional[str] = None,
-              stream: Optional[bool] = None,
-              recall_target: Optional[float] = None,
-              precision_target: Optional[float] = None,
-              delta: Optional[float] = None,
-              refresh_plan: bool = False,
-              incremental: bool = True, **cfg_overrides) -> ServeResult:
+    def query(self, options: Optional[QueryOptions] = None, *,
+              refresh_plan: Optional[bool] = None,
+              incremental: Optional[bool] = None,
+              **legacy_overrides) -> ServeResult:
         """One FDJ query against the current corpus.
+
+        ``options`` is the typed request surface shared with
+        ``JoinFleet.submit``; the keyword form is the deprecated legacy
+        shim (see ``_coerce_options``).
 
         Warm-path invariants (tests/test_join_service.py): a repeated
         query reports zero extraction charges, zero plane H2D bytes, and
         returns pairs byte-identical to a cold ``fdj_join`` with the same
         config, on every engine and in stream mode.
         """
+        opts = self._coerce_options(
+            options, dict(legacy_overrides, refresh_plan=refresh_plan,
+                          incremental=incremental))
         tracer = current_tracer()
         with tracer.span("query", n=self.queries) as sp:
-            out = self._query_impl(
-                engine=engine, stream=stream, recall_target=recall_target,
-                precision_target=precision_target, delta=delta,
-                refresh_plan=refresh_plan, incremental=incremental,
-                **cfg_overrides)
+            out = self._query_impl(opts)
             if tracer:
                 sp.set(engine=out.join.engine_stats.engine
                        if out.join.engine_stats else "none",
@@ -271,22 +370,14 @@ class JoinService:
         self.metrics.observe("serve.query_wall_s", out.wall_s)
         return out
 
-    def _query_impl(self, *, engine, stream, recall_target, precision_target,
-                    delta, refresh_plan, incremental,
-                    **cfg_overrides) -> ServeResult:
+    def _query_impl(self, opts: QueryOptions) -> ServeResult:
         t0 = time.perf_counter()
-        overrides = dict(cfg_overrides)
-        for k, v in (("engine", engine), ("stream_refinement", stream),
-                     ("recall_target", recall_target),
-                     ("precision_target", precision_target),
-                     ("delta", delta)):
-            if v is not None:
-                overrides[k] = v
-        cfg = dataclasses.replace(self.cfg, **overrides)
+        refresh_plan, incremental = opts.refresh_plan, opts.incremental
+        cfg = opts.resolve(self.cfg)
 
         qledger = CostLedger()
         qledger.bind_metrics(self.metrics)   # flows feed once, as they happen
-        oracle = self.dataset.make_oracle()
+        oracle = self._oracle_factory()
         oracle.ledger = qledger
         label = make_label_fn(oracle, {})
         extractor = self._extractor_factory(self.dataset)
@@ -295,12 +386,38 @@ class JoinService:
         key = self._plan_key(cfg)
         plan = self._plans.get(key)
         plan_hit = plan is not None and not refresh_plan
-        if not plan_hit:
-            plan = plan_join(self.dataset, oracle,
-                             self._proposer_factory(self.dataset), extractor,
-                             cfg, ledger=qledger, label=label)
+        if plan_hit:
+            self._plans.pop(key)            # LRU: hit refreshes recency
+            self._plans[key] = plan
+        else:
+            lib = self._plan_library
+            lib_key = (self._fp_l, self._fp_r, key)
+
+            def build():
+                return plan_join(self.dataset, oracle,
+                                 self._proposer_factory(self.dataset),
+                                 extractor, cfg, ledger=qledger, label=label)
+
+            if lib is not None and not refresh_plan:
+                # cross-tenant dedup: a sibling service already planned
+                # this exact (corpus, plan key) — determinism makes the
+                # loaned copy byte-identical to planning it here.  The
+                # lease serializes racing colds, so the loser wakes to a
+                # hit instead of planning the same thing twice.
+                with lib.lease(lib_key):
+                    plan = lib.get(lib_key)
+                    plan_hit = plan is not None
+                    if plan is None:
+                        plan = build()
+                        lib.put(lib_key, plan)
+            else:
+                plan = build()
+                if lib is not None:
+                    lib.put(lib_key, plan)
+            self._plans.pop(key, None)
             self._plans[key] = plan
             self._evals.pop(key, None)      # plan rebuilt: stale evaluation
+            self._reservoirs.pop(key, None)
             if plan.calib_pairs is not None:
                 # seed the calibration reservoir from the plan's own labeled
                 # threshold sample — step ④ already paid for these labels
@@ -308,6 +425,15 @@ class JoinService:
                     pairs=list(plan.calib_pairs),
                     labels=np.asarray(plan.calib_labels, bool).copy(),
                     n_r=self.dataset.n_r)
+            while len(self._plans) > self._PLAN_CACHE_MAX:
+                # bounded, like _programs (PR 7): a tenant rotating configs
+                # must not pin plans + reservoirs + eval caches forever.
+                # Evicting a plan drops its dependents — they are keyed by
+                # it and unreachable once it is gone.
+                old = next(iter(self._plans))
+                self._plans.pop(old)
+                self._evals.pop(old, None)
+                self._reservoirs.pop(old, None)
 
         # capture the plane set execute/delta consumed: the eval cache must
         # remember the scalar normalizations its candidates were computed
@@ -365,6 +491,7 @@ class JoinService:
         diff = FeaturePlaneStore.delta(snap0, self.store.snapshot())
         qledger.record_plane_traffic(
             hits=diff["hits"], misses=diff["misses"],
+            dedup_hits=diff["dedup_hits"],
             evicted_bytes=diff["evicted_bytes"],
             resident_bytes=diff["resident_bytes"],
             bytes_h2d=diff["bytes_to_device"]
@@ -568,8 +695,14 @@ class JoinService:
 
     # -- appends ------------------------------------------------------------
 
-    def append_right(self, rows: DeltaRows) -> dict:
+    def append_right(self, rows: DeltaRows,
+                     options: Optional[QueryOptions] = None) -> dict:
         """Append R rows, extending resident R planes by the delta only.
+
+        ``options`` is accepted for call-shape parity with ``query`` and
+        ``JoinFleet.submit`` (scripted drivers carry one request type); an
+        append itself is config-independent, so the options are validated
+        against the base config and otherwise unused.
 
         Returns the append's ledger + store counter delta.  Cached plans
         and cached evaluations survive — the next query under a cached
@@ -582,6 +715,8 @@ class JoinService:
         per append; chaining the fingerprint incrementally and slicing the
         extraction simulation are follow-ups if appends ever dominate.
         """
+        if options is not None:
+            options.resolve(self.cfg)   # reject unknown override fields
         ds = self.dataset
         off = ds.n_r
         new_texts = list(ds.texts_r) + list(rows.texts)
@@ -616,7 +751,8 @@ class JoinService:
                     [entry.device, jnp.asarray(dfd.data_r)], axis=0)
                 self.store.charge_upload(dfd.data_r.nbytes)
                 self.store.put(spec, "r", self._fp_r, vals, host,
-                               "embed", entry.scale, device=dev)
+                               "embed", entry.scale, device=dev,
+                               tenant=self.tenant)
             else:
                 # scalar planes: the p95–p5 scale is a whole-corpus
                 # statistic — recompute from raw values so the result is
@@ -634,16 +770,18 @@ class JoinService:
                         [entry.device, jnp.asarray(delta_host)])
                     self.store.charge_upload(delta_host.nbytes)
                     self.store.put(spec, "r", self._fp_r, vals, host,
-                                   "scalar", fd.scale, device=dev)
+                                   "scalar", fd.scale, device=dev,
+                                   tenant=self.tenant)
                 else:
                     self.store.put(spec, "r", self._fp_r, vals, fd.data_r,
-                                   "scalar", fd.scale)
+                                   "scalar", fd.scale, tenant=self.tenant)
                     self.store.put(spec, "l", self._fp_l, vals_l, fd.data_l,
-                                   "scalar", fd.scale)
+                                   "scalar", fd.scale, tenant=self.tenant)
 
         diff = FeaturePlaneStore.delta(snap0, self.store.snapshot())
         aledger.record_plane_traffic(
             hits=diff["hits"], misses=diff["misses"],
+            dedup_hits=diff["dedup_hits"],
             evicted_bytes=diff["evicted_bytes"],
             resident_bytes=diff["resident_bytes"],
             bytes_h2d=diff["bytes_to_device"])

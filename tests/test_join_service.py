@@ -13,7 +13,8 @@ Invariants under test (ISSUE 3 acceptance criteria):
 
 import pytest
 
-from repro.core.join import FDJConfig, execute_join, fdj_join
+from repro.core.join import (FDJConfig, QueryOptions, execute_join,
+                             fdj_join)
 from repro.data import synth
 from repro.data.simulated_llm import SimulatedExtractor, SimulatedProposer
 from repro.serving.join_service import (JoinService, hold_out_right,
@@ -84,8 +85,8 @@ def test_plan_and_planes_shared_across_engines():
     svc = JoinService(ds, FDJConfig(engine="numpy", engine_opts=_OPTS,
                                     seed=0, mc_trials=4000))
     a = svc.query()
-    b = svc.query(engine="sharded")
-    c = svc.query(engine="pallas")
+    b = svc.query(QueryOptions(engine="sharded"))
+    c = svc.query(QueryOptions(engine="pallas"))
     assert b.plan_hit and c.plan_hit         # plan is engine-independent
     assert b.pairs == a.pairs == c.pairs
     assert b.cost.inference == 0.0 and b.cost.bytes_h2d == 0
@@ -185,7 +186,7 @@ def test_delta_and_replan_paths_both_meet_guarantee():
     dq = svc.query()
     assert dq.delta_rows == 8
     assert dq.join.recall >= cfg.recall_target          # incremental path
-    replan = svc.query(refresh_plan=True)
+    replan = svc.query(QueryOptions(refresh_plan=True))
     assert replan.delta_rows == 0 and not replan.plan_hit
     assert replan.join.recall >= cfg.recall_target      # replanned path
     # and the replanned service query equals a cold join of the grown corpus
