@@ -4,6 +4,13 @@
 #   lint:     ruff check (no autofix), config in ruff.toml; skipped with a
 #             loud warning when ruff is not installed (the container image
 #             may not ship it — the GitHub workflow always does)
+#   analyze:  repo-invariant static analysis (python -m repro.analysis
+#             --check, DESIGN.md §9): static lock-order graph with cycle
+#             + blocking-under-lock detection across the threaded stack,
+#             repo-specific AST lint (tracer guards, legacy-kwarg ban,
+#             metric-name declarations, monotonic-clock-only span paths),
+#             and HLO contract-manifest validation; renders the lock
+#             graph as DOT into benchmarks/results/ for artifact upload
 #   tier-1:   python -m pytest -q -m "not slow"     (~2 minutes, incl. the
 #             small pod-mesh subprocess dry-runs; --strict-markers via
 #             pytest.ini: unknown marks fail collection)
@@ -71,6 +78,10 @@ print("\n".join(bad) if bad else f"E501 clean (<= {LIMIT} cols)")
 sys.exit(1 if bad else 0)
 PYEOF
 fi
+
+echo "== analyze: lock graph + invariant lint + HLO manifest =="
+mkdir -p benchmarks/results
+python -m repro.analysis --check --dot benchmarks/results/lockgraph.dot
 
 echo "== tier-1: fast test subset =="
 python -m pytest -q -m "not slow"

@@ -1,0 +1,27 @@
+"""Repo-invariant static analysis (DESIGN.md §9).
+
+``python -m repro.analysis --check`` runs, in one CI-gated pass:
+
+  * ``lockgraph``      — static lock-order graph over the threaded stack
+    (cycle = potential deadlock = failure) + blocking-under-lock checks,
+    with an opt-in runtime witness (``witness.lock_witness``) that
+    cross-validates real acquisition orders during threaded tests;
+  * ``checkers``       — AST lint rules ruff cannot express: tracer
+    guards, legacy-kwarg bans, metric-name declarations, monotonic-clock
+    enforcement on span paths;
+  * ``hlo_contracts``  — declarative collective budgets for compiled
+    programs, checked by the multipod dry-run against the committed
+    ``benchmarks/baseline/hlo_manifest.json``.
+"""
+
+from repro.analysis.findings import Finding
+from repro.analysis.lockgraph import build_lock_graph
+from repro.analysis.checkers import run_checkers
+from repro.analysis.hlo_contracts import (ProgramContract, check_program,
+                                          load_manifest)
+from repro.analysis.witness import lock_witness
+
+__all__ = [
+    "Finding", "build_lock_graph", "run_checkers", "ProgramContract",
+    "check_program", "load_manifest", "lock_witness",
+]

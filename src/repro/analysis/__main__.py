@@ -1,0 +1,81 @@
+"""CLI for the analysis pass: ``python -m repro.analysis --check``.
+
+Exit 0 when every analyzer is clean, 1 with one finding per line on
+stderr otherwise.  ``--dot PATH`` additionally renders the lock-order
+graph as Graphviz DOT (CI uploads it as a workflow artifact next to the
+Perfetto trace).  The HLO *manifest structure* is validated here; the
+expensive lower-and-compare against a real program runs in the multipod
+dry-run (``repro.launch.multipod_dryrun``), which CI also executes.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+from repro.analysis.checkers import run_checkers
+from repro.analysis.findings import Finding
+from repro.analysis.hlo_contracts import default_manifest_path, load_manifest
+from repro.analysis.lockgraph import build_lock_graph, render_text, to_dot
+
+
+def _check_manifest() -> list:
+    """The committed manifest must exist and parse into contracts — the
+    dry-run falls back to defaults without it, which would silently
+    un-gate the collective budgets."""
+    path = default_manifest_path()
+    rel = os.path.relpath(path, os.getcwd())
+    try:
+        contracts = load_manifest(path)
+    except FileNotFoundError:
+        return [Finding("hlo-manifest", rel, 0,
+                        "missing: regenerate with `python -m "
+                        "repro.launch.multipod_dryrun --write-manifest` "
+                        "and commit it")]
+    except (KeyError, ValueError) as e:
+        return [Finding("hlo-manifest", rel, 0,
+                        f"unparseable ({type(e).__name__}: {e})")]
+    if "sharded_chunk_step" not in contracts:
+        return [Finding("hlo-manifest", rel, 0,
+                        "no 'sharded_chunk_step' program entry — the "
+                        "dry-run's chunk-step gate has no contract")]
+    return []
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.analysis")
+    ap.add_argument("--check", action="store_true",
+                    help="run all analyzers; exit nonzero on any finding")
+    ap.add_argument("--dot", metavar="PATH", default=None,
+                    help="write the lock-order graph as Graphviz DOT")
+    args = ap.parse_args(argv)
+    if not args.check and not args.dot:
+        ap.error("nothing to do: pass --check and/or --dot PATH")
+
+    graph = build_lock_graph()
+    if args.dot:
+        os.makedirs(os.path.dirname(os.path.abspath(args.dot)),
+                    exist_ok=True)
+        with open(args.dot, "w", encoding="utf-8") as f:
+            f.write(to_dot(graph))
+        print(f"lock graph DOT -> {args.dot}")
+    if not args.check:
+        return 0
+
+    findings = list(graph.findings)
+    findings += run_checkers()
+    findings += _check_manifest()
+
+    print(render_text(graph), end="")
+    if findings:
+        print(f"\n{len(findings)} finding(s):", file=sys.stderr)
+        for f in findings:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    print("analysis: clean (lock graph, lint rules, HLO manifest)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,216 @@
+"""Declarative compiled-program contracts over HLO (DESIGN.md §9).
+
+PR 4's pod-locality invariant — *cross-pod interconnect carries
+candidate counts, never planes or masks* — was asserted by ad-hoc
+budgets inside ``launch/multipod_dryrun.py``.  This module turns it into
+a committed, reviewable artifact: ``benchmarks/baseline/hlo_manifest.json``
+names, per compiled program, the **allowed collective op-set**, the
+**allowed cross-pod op-set**, the **per-op cross-pod byte budget** (an
+affine form in the pod count, since the count gather moves one int32 per
+pod), the **plane ratio** (total cross-pod traffic must stay orders
+below the staged planes), and the **host-pull ceiling** (bytes per
+device per stream step beyond the 8 B/candidate pulls).
+
+The multipod dry-run lowers the real chunk-step program and calls
+``check_program`` against the manifest: an unreviewed collective — a new
+kind, a pod-crossing kind that used to stay inside pods, an op over
+budget — fails CI with a named diff pointing at the manifest entry to
+update *in review*.  Regenerate intentionally with
+``python -m repro.launch.multipod_dryrun --write-manifest`` and commit
+the diff.
+
+Byte parsing and replica-group pod analysis come from
+``distributed.hlo_analysis`` (while-trip multipliers, iota + explicit
+group forms); this module adds only the policy layer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Optional
+
+from repro.analysis.findings import Finding, repo_root
+from repro.distributed.hlo_analysis import (_iter_collectives,
+                                            collective_bytes,
+                                            pod_crossing_stats)
+
+MANIFEST_RELPATH = os.path.join("benchmarks", "baseline",
+                                "hlo_manifest.json")
+
+
+@dataclasses.dataclass(frozen=True)
+class ProgramContract:
+    """Budget envelope for one compiled program's collectives."""
+    name: str
+    collectives: tuple                  # allowed kinds, any locality
+    cross_pod_collectives: tuple        # allowed pod-crossing kinds
+    cross_pod_op_bytes_per_pod: int     # per-op budget = per_pod * n_pods
+    cross_pod_op_bytes_base: int        #                + base
+    plane_ratio: int                    # total cross < plane_bytes / ratio
+    host_pull_bytes_per_device_step: int
+    require_cross_pod: bool             # count gather must exist (pods > 1)
+
+    def cross_op_budget(self, n_pods: int) -> int:
+        return self.cross_pod_op_bytes_per_pod * n_pods \
+            + self.cross_pod_op_bytes_base
+
+    def host_pull_budget(self, n_candidates: int, n_devices: int,
+                         n_steps: int) -> int:
+        # 8 B per pulled (i, j) pair + the per-device per-step scalars
+        # (count, base offset, conjunct evals) + slack for padding
+        return (8 * n_candidates
+                + self.host_pull_bytes_per_device_step * n_devices * n_steps
+                + 1024)
+
+
+def default_manifest_path() -> str:
+    return os.path.join(repo_root(), MANIFEST_RELPATH)
+
+
+def load_manifest(path: Optional[str] = None) -> dict:
+    """``{program name: ProgramContract}`` from the committed manifest."""
+    path = path or default_manifest_path()
+    with open(path, encoding="utf-8") as f:
+        raw = json.load(f)
+    out = {}
+    for name, e in raw["programs"].items():
+        out[name] = ProgramContract(
+            name=name,
+            collectives=tuple(e["collectives"]),
+            cross_pod_collectives=tuple(e["cross_pod_collectives"]),
+            cross_pod_op_bytes_per_pod=int(e["cross_pod_op_bytes_per_pod"]),
+            cross_pod_op_bytes_base=int(e["cross_pod_op_bytes_base"]),
+            plane_ratio=int(e["plane_ratio"]),
+            host_pull_bytes_per_device_step=int(
+                e["host_pull_bytes_per_device_step"]),
+            require_cross_pod=bool(e["require_cross_pod"]),
+        )
+    return out
+
+
+def dump_manifest(contracts: dict, path: Optional[str] = None) -> str:
+    path = path or default_manifest_path()
+    raw = {"_comment": (
+        "Compiled-HLO contract manifest (DESIGN.md §9). Checked by "
+        "repro.analysis.hlo_contracts against freshly lowered HLO in the "
+        "multipod dry-run; regenerate intentionally with "
+        "`python -m repro.launch.multipod_dryrun --write-manifest` and "
+        "review the diff — a new collective kind or budget is a "
+        "cost-model change, not a formality."),
+        "programs": {}}
+    for name in sorted(contracts):
+        c = contracts[name]
+        raw["programs"][name] = {
+            "collectives": sorted(c.collectives),
+            "cross_pod_collectives": sorted(c.cross_pod_collectives),
+            "cross_pod_op_bytes_per_pod": c.cross_pod_op_bytes_per_pod,
+            "cross_pod_op_bytes_base": c.cross_pod_op_bytes_base,
+            "plane_ratio": c.plane_ratio,
+            "host_pull_bytes_per_device_step":
+                c.host_pull_bytes_per_device_step,
+            "require_cross_pod": c.require_cross_pod,
+        }
+    text = json.dumps(raw, indent=1, sort_keys=False) + "\n"
+    with open(path, "w", encoding="utf-8") as f:
+        f.write(text)
+    return path
+
+
+def _present_kinds(hlo_text: str) -> set:
+    """Collective kinds with at least one op in the program (by_kind is
+    zero-seeded with every kind, so it can't be used for presence)."""
+    return {kind for kind, _, _ in _iter_collectives(hlo_text)}
+
+
+def check_program(hlo_text: str, contract: ProgramContract, *,
+                  n_pods: int, pod_size: int,
+                  plane_bytes: int) -> tuple:
+    """Gate one lowered program.  Returns ``(findings, report)``: empty
+    findings = within contract; the report is the dry-run's ``hlo``
+    block (observed kinds, bytes, budgets) either way."""
+    where = f"hlo_manifest.json:{contract.name}"
+    coll = collective_bytes(hlo_text)
+    kinds = _present_kinds(hlo_text)
+    cross = pod_crossing_stats(hlo_text, pod_size)
+    budget = contract.cross_op_budget(n_pods)
+    report = {
+        "program": contract.name,
+        "collective_bytes_total": coll.total_bytes,
+        "collective_ops": coll.n_ops,
+        "collective_kinds": sorted(kinds),
+        "cross_pod_bytes": cross.cross_pod_bytes,
+        "cross_pod_ops": cross.cross_pod_ops,
+        "intra_pod_bytes": cross.intra_pod_bytes,
+        "max_cross_op_bytes": cross.max_cross_op_bytes,
+        "cross_kinds": cross.cross_kinds,
+        "staged_plane_bytes": plane_bytes,
+        "cross_op_budget_bytes": budget,
+    }
+    fs = []
+
+    def bad(msg):
+        fs.append(Finding("hlo-contract", where, 0, msg))
+
+    for kind in sorted(kinds - set(contract.collectives)):
+        bad(f"collective {kind!r} not in the reviewed op-set "
+            f"{sorted(contract.collectives)} — a new collective is a "
+            f"cost-model change; add it to the manifest in review")
+    for kind in sorted(set(cross.cross_kinds)
+                       - set(contract.cross_pod_collectives)):
+        bad(f"{kind!r} crosses a pod boundary but only "
+            f"{sorted(contract.cross_pod_collectives)} may — pod "
+            f"interconnect carries counts, never planes or masks")
+    if n_pods > 1:
+        if contract.require_cross_pod and cross.cross_pod_ops < 1:
+            bad("expected the cross-pod candidate-count gather, found no "
+                "pod-crossing collective — the hierarchical prefix-sum "
+                "was compiled away or replica groups changed shape")
+        if cross.max_cross_op_bytes > budget:
+            bad(f"a cross-pod collective moves {cross.max_cross_op_bytes} "
+                f"B > count budget {budget} B "
+                f"(= {contract.cross_pod_op_bytes_per_pod}*{n_pods} + "
+                f"{contract.cross_pod_op_bytes_base}): planes/masks are "
+                f"crossing pods")
+        if plane_bytes > 0 and cross.cross_pod_bytes >= \
+                plane_bytes / contract.plane_ratio:
+            bad(f"total cross-pod traffic {cross.cross_pod_bytes} B is "
+                f"not {contract.plane_ratio}x below the staged planes "
+                f"({plane_bytes} B)")
+    elif cross.cross_pod_ops != 0:
+        bad(f"single-pod mesh has {cross.cross_pod_ops} pod-crossing "
+            f"collective(s) — replica-group pod math regressed")
+    return fs, report
+
+
+def observed_contract(hlo_text: str, name: str, *, pod_size: int,
+                      base: Optional[ProgramContract] = None
+                      ) -> ProgramContract:
+    """Contract matching the *observed* op-sets of ``hlo_text`` while
+    keeping the committed budget policy (``--write-manifest``): op-sets
+    are evidence, budgets are review decisions."""
+    if base is None:
+        base = DEFAULT_CONTRACTS[name]
+    cross = pod_crossing_stats(hlo_text, pod_size)
+    return dataclasses.replace(
+        base, name=name,
+        collectives=tuple(sorted(_present_kinds(hlo_text))),
+        cross_pod_collectives=tuple(sorted(cross.cross_kinds)))
+
+
+# Budget policy seeds for --write-manifest on a fresh tree.  The count
+# gather's result is s32[n_pods] per device: 4*32 B per pod of slack
+# covers fused/rewritten forms while staying orders below any plane.
+DEFAULT_CONTRACTS = {
+    "sharded_chunk_step": ProgramContract(
+        name="sharded_chunk_step",
+        collectives=("all-gather",),
+        cross_pod_collectives=("all-gather",),
+        cross_pod_op_bytes_per_pod=128,
+        cross_pod_op_bytes_base=256,
+        plane_ratio=100,
+        host_pull_bytes_per_device_step=12,
+        require_cross_pod=True,
+    ),
+}

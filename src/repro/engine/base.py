@@ -44,7 +44,7 @@ import dataclasses
 import time
 from typing import Iterator, Optional, Sequence
 
-from repro.obs.trace import current_tracer
+from repro.obs.trace import Tracer, current_tracer
 
 # vacuous-conjunction (empty clause list) emissions are chunked so one host
 # list never materializes the whole n_l x n_r cross product: each chunk
@@ -293,7 +293,8 @@ class CnfEngine(abc.ABC):
                                    conjunct_evals=delta.conjunct_evals), idx)
             t_prev = time.perf_counter()
 
-    def _trace_band_step(self, tracer, idx, delta, n_pairs, t_prev, t_now):
+    def _trace_band_step(self, tracer: Tracer, idx, delta, n_pairs,
+                         t_prev, t_now):
         """Record one chunk's ``band_step[idx]`` span plus any backend-
         provided sub-slices (sharded dispatch/pull windows).  The step span
         opens at the earliest sub-slice start — for a prefetched ring step

@@ -71,7 +71,8 @@ def _engine_opts(mesh, *, tl: int, tr: int, r_chunk: int, use_kernel: bool,
     return opts
 
 
-def _check_parity(mesh, rep: dict, *, tl, tr, r_chunk, use_kernel) -> None:
+def _check_parity(mesh, rep: dict, *, tl, tr, r_chunk, use_kernel,
+                  contract=None) -> None:
     from repro.core.costs import CostLedger
     from repro.core.featurize import FeaturizationSpec, vectorize
     from repro.data.cnf_fixtures import representative_cnf
@@ -120,12 +121,16 @@ def _check_parity(mesh, rep: dict, *, tl, tr, r_chunk, use_kernel) -> None:
     assert s.conjunct_evals > 0, "conjunct-eval accounting missing"
     # host traffic must scale with candidates (8 B per pulled pair, plus
     # one count + one base + one conjunct-eval int32 per device per
-    # step), never with the O(n_l*n_r) plane
+    # step), never with the O(n_l*n_r) plane; the per-device-step ceiling
+    # is contract policy from benchmarks/baseline/hlo_manifest.json
     n_dev = 1
     for v in mesh.shape.values():
         n_dev *= v
     n_steps = math.ceil(s.n_r / r_chunk)
-    allow = 8 * s.n_candidates + 12 * n_dev * n_steps + 1024
+    if contract is not None:
+        allow = contract.host_pull_budget(s.n_candidates, n_dev, n_steps)
+    else:
+        allow = 8 * s.n_candidates + 12 * n_dev * n_steps + 1024
     assert s.bytes_to_host <= allow, (
         f"host traffic {s.bytes_to_host} not O(candidates) (allow {allow})")
 
@@ -156,7 +161,8 @@ def _check_parity(mesh, rep: dict, *, tl, tr, r_chunk, use_kernel) -> None:
                       "final_capacity": int(eng1.last_sweep_capacity)}
 
 
-def _check_serving(mesh, rep: dict, *, tl, tr, r_chunk, use_kernel) -> None:
+def _check_serving(mesh, rep: dict, *, tl, tr, r_chunk, use_kernel,
+                   contract=None) -> None:
     from repro.core.join import FDJConfig
     from repro.data import synth
     from repro.serving.join_service import JoinService, hold_out_right
@@ -197,17 +203,14 @@ def _check_serving(mesh, rep: dict, *, tl, tr, r_chunk, use_kernel) -> None:
     }
 
 
-def _check_hlo(mesh, rep: dict, *, tl, tr, r_chunk, use_kernel) -> None:
-    """Lower + compile one chunk-step program and assert pod locality:
-    cross-pod collectives exist (the count gather) but every one of them
-    is candidate-count sized — no plane or mask crosses a pod boundary."""
+def _lower_chunk_step(mesh, *, tl, tr, r_chunk, use_kernel) -> tuple:
+    """Lower + compile the real chunk-step program; returns
+    ``(hlo text, n_pods, pod_size, staged plane bytes)``."""
     import jax.numpy as jnp
     from repro.core.costs import CostLedger
     from repro.data.cnf_fixtures import representative_cnf
     from repro.data.simulated_llm import SimulatedExtractor
     from repro.data import synth
-    from repro.distributed.hlo_analysis import (collective_bytes,
-                                                pod_crossing_stats)
     from repro.engine.sharded import ShardedEngine, _mesh_geometry
     from repro.kernels.fused_cnf_join import ops as cnf_ops
 
@@ -227,38 +230,28 @@ def _check_hlo(mesh, rep: dict, *, tl, tr, r_chunk, use_kernel) -> None:
                     tuple(float(t) for t in thetas), rows_shard, cap,
                     r_chunk, n_chunks)
     hlo = fn.lower(*staged.arrays, jnp.int32(0)).compile().as_text()
-    pod_size = n_data * n_model
-    coll = collective_bytes(hlo)
-    cross = pod_crossing_stats(hlo, pod_size)
     plane_bytes = sum(int(a.nbytes) for a in staged.arrays)
-    # counts budget: the cross-pod gather moves one int32 pod total per
-    # pod (result s32[n_pods] per device); allow generous slack for
-    # fused/rewritten forms while staying orders below any plane
-    count_budget = 4 * n_pods * 32 + 256
-    rep["hlo"] = {
-        "collective_bytes_total": coll.total_bytes,
-        "collective_ops": coll.n_ops,
-        "cross_pod_bytes": cross.cross_pod_bytes,
-        "cross_pod_ops": cross.cross_pod_ops,
-        "intra_pod_bytes": cross.intra_pod_bytes,
-        "max_cross_op_bytes": cross.max_cross_op_bytes,
-        "cross_kinds": cross.cross_kinds,
-        "staged_plane_bytes": plane_bytes,
-        "cross_op_budget_bytes": count_budget,
-    }
-    if n_pods > 1:
-        assert cross.cross_pod_ops >= 1, (
-            "expected a cross-pod candidate-count gather, found none")
-        assert cross.max_cross_op_bytes <= count_budget, (
-            f"a cross-pod collective moves {cross.max_cross_op_bytes} bytes "
-            f"(> count budget {count_budget}): planes/masks are crossing "
-            f"pods")
-        assert cross.cross_pod_bytes < plane_bytes / 100, (
-            f"cross-pod traffic {cross.cross_pod_bytes} not orders below "
-            f"the staged planes {plane_bytes}")
-    else:
-        assert cross.cross_pod_ops == 0, (
-            "single-pod mesh must have no pod-crossing collectives")
+    return hlo, n_pods, n_data * n_model, plane_bytes
+
+
+def _check_hlo(mesh, rep: dict, *, tl, tr, r_chunk, use_kernel,
+               contract=None) -> None:
+    """Lower + compile one chunk-step program and gate its collectives
+    against the committed manifest (benchmarks/baseline/hlo_manifest.json):
+    cross-pod collectives exist (the count gather) but every one of them
+    is counts-sized and of a reviewed kind — no plane or mask crosses a
+    pod boundary, and no unreviewed collective lands green."""
+    from repro.analysis.hlo_contracts import (DEFAULT_CONTRACTS,
+                                              check_program)
+
+    if contract is None:
+        contract = DEFAULT_CONTRACTS["sharded_chunk_step"]
+    hlo, n_pods, pod_size, plane_bytes = _lower_chunk_step(
+        mesh, tl=tl, tr=tr, r_chunk=r_chunk, use_kernel=use_kernel)
+    findings, rep["hlo"] = check_program(
+        hlo, contract, n_pods=n_pods, pod_size=pod_size,
+        plane_bytes=plane_bytes)
+    assert not findings, "; ".join(str(f) for f in findings)
 
 
 def main() -> None:
@@ -275,6 +268,13 @@ def main() -> None:
                     help="run the Pallas kernel (interpret mode) instead "
                          "of the jnp reference math — slow at high device "
                          "counts, exercised on small meshes in tier-1")
+    ap.add_argument("--manifest", default=None,
+                    help="HLO contract manifest path (default: "
+                         "benchmarks/baseline/hlo_manifest.json)")
+    ap.add_argument("--write-manifest", action="store_true",
+                    help="regenerate the manifest's op-sets from the "
+                         "freshly lowered program (budgets keep committed "
+                         "policy) instead of checking — review the diff")
     args = ap.parse_args()
     if tuple(int(x) for x in args.mesh.split(",")) != _SHAPE:
         raise SystemExit(f"--mesh {args.mesh} disagrees with the "
@@ -282,6 +282,10 @@ def main() -> None:
     n_pods, n_data, n_model = _SHAPE
 
     import jax
+    from repro.analysis.hlo_contracts import (DEFAULT_CONTRACTS,
+                                              default_manifest_path,
+                                              dump_manifest, load_manifest,
+                                              observed_contract)
     from repro.distributed.mesh import make_join_mesh
     t0 = time.time()
     rep = {"mesh": list(_SHAPE), "devices": len(jax.devices()),
@@ -292,6 +296,28 @@ def main() -> None:
     # word, r_chunk covers one tile per model-axis device
     tl, tr = 8, 32
     r_chunk = tr * n_model
+
+    manifest_path = args.manifest or default_manifest_path()
+    if args.write_manifest:
+        hlo, _, pod_size, _ = _lower_chunk_step(
+            mesh, tl=tl, tr=tr, r_chunk=r_chunk, use_kernel=args.kernel)
+        base = (load_manifest(manifest_path)
+                if _os.path.exists(manifest_path)
+                else dict(DEFAULT_CONTRACTS))
+        base["sharded_chunk_step"] = observed_contract(
+            hlo, "sharded_chunk_step", pod_size=pod_size,
+            base=base.get("sharded_chunk_step"))
+        out = dump_manifest(base, manifest_path)
+        print(json.dumps({"wrote_manifest": out}))
+        raise SystemExit(0)
+    try:
+        contract = load_manifest(manifest_path)["sharded_chunk_step"]
+        rep["manifest"] = manifest_path
+    except (OSError, KeyError) as e:
+        rep["manifest"] = (f"unavailable ({type(e).__name__}) — "
+                           f"falling back to DEFAULT_CONTRACTS policy")
+        contract = DEFAULT_CONTRACTS["sharded_chunk_step"]
+
     failed = []
     for name, check in (("parity", _check_parity),
                         ("serving", _check_serving),
@@ -300,7 +326,7 @@ def main() -> None:
             continue
         try:
             check(mesh, rep, tl=tl, tr=tr, r_chunk=r_chunk,
-                  use_kernel=args.kernel)
+                  use_kernel=args.kernel, contract=contract)
         except Exception as e:
             failed.append(name)
             rep[name] = {"error": f"{type(e).__name__}: {e}",

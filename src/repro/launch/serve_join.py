@@ -128,8 +128,11 @@ def _run_script(svc: JoinService, script: str, pool) -> list:
         elif name in ("query", "replan"):
             # the typed request surface (DESIGN.md §8): script modifiers
             # become one QueryOptions, same shape JoinFleet.submit takes
-            r = svc.query(QueryOptions.from_legacy(
-                refresh_plan=(name == "replan"), **kw))
+            named = {k: kw.pop(k) for k in
+                     ("engine", "stream", "recall_target",
+                      "precision_target", "delta") if k in kw}
+            r = svc.query(QueryOptions(
+                refresh_plan=(name == "replan"), overrides=kw, **named))
             st = r.store
             looked = st["hits"] + st["misses"]
             ev = {"op": raw, "recall": round(r.join.recall, 4),

@@ -102,6 +102,31 @@ class Histogram:
         }
 
 
+# Serving-layer metric names that do NOT derive from the CostLedger
+# (those live in core.costs.FIELD_METRICS / GAUGE_METRICS and round-trip
+# through ledger_from_metrics).  The analysis pass (repro.analysis
+# checkers, rule "metric-name") requires every literal name passed to
+# inc/observe/set_gauge to appear either here or in the ledger maps, so
+# a typo'd or undeclared metric fails CI instead of silently creating a
+# dangling instrument nothing reads.
+DECLARED_METRICS = {
+    "serve.plan_hits": "JoinService plan-cache hits",
+    "serve.plan_misses": "JoinService plan-cache misses",
+    "serve.query_wall_s": "per-query wall seconds (service-side)",
+    "fleet.submitted": "queries accepted by JoinFleet.submit",
+    "fleet.admitted": "queries admitted by the round-robin worker",
+    "fleet.completed": "queries finished without error",
+    "fleet.failed": "queries that raised",
+    "fleet.queue_wait_s": "submit-to-admission wait seconds",
+    "fleet.query_wall_s": "per-query wall seconds (fleet-side)",
+    "fleet.band_steps": "band-step dispatches through BandScheduler",
+    "fleet.interleaves": "band steps that switched the running query",
+    "refine.batches": "oracle refinement batches pulled off the queue",
+    "refine.pairs": "candidate pairs refined",
+    "refine.queue_depth": "RefinementPump queue depth (gauge)",
+}
+
+
 class MetricsRegistry:
     """Get-or-create instrument registry.  One lock guards instrument
     creation; mutation of an instrument is a float add under the GIL, so

@@ -83,7 +83,7 @@ class Tracer:
 
     def __init__(self):
         self.epoch = time.perf_counter()       # export time zero
-        self.wall_epoch = time.time()          # for humans, metadata only
+        self.wall_epoch = time.time()  # wallclock-ok: metadata, not span math
         self._spans: list = []
         self._lock = threading.Lock()
         self._ids = itertools.count(1)

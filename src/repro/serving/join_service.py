@@ -212,16 +212,31 @@ class PlanLibrary:
     def __init__(self):
         self._plans: OrderedDict = OrderedDict()
         self._lock = threading.Lock()
-        self._leases: dict = {}        # key -> per-key planning lock
+        self._leases: dict = {}        # key -> [per-key lock, holder count]
         self.hits = 0
         self.misses = 0
 
     @contextlib.contextmanager
     def lease(self, key: tuple):
+        # refcounted so the entry dies with its last holder: a long-lived
+        # fleet rotating plan keys must not accumulate one Lock per key
+        # ever leased (keys cached in _plans used to pin theirs forever)
         with self._lock:
-            lk = self._leases.setdefault(key, threading.Lock())
-        with lk:
-            yield
+            entry = self._leases.get(key)
+            if entry is None:
+                lk = threading.Lock()
+                entry = self._leases[key] = [lk, 0]
+            else:
+                lk = entry[0]
+            entry[1] += 1
+        try:
+            with lk:
+                yield
+        finally:
+            with self._lock:
+                entry[1] -= 1
+                if entry[1] == 0 and self._leases.get(key) is entry:
+                    del self._leases[key]
 
     def get(self, key: tuple) -> Optional[JoinPlan]:
         with self._lock:
@@ -239,9 +254,6 @@ class PlanLibrary:
             self._plans.move_to_end(key)
             while len(self._plans) > self._MAX:
                 self._plans.popitem(last=False)
-            for k in [k for k in self._leases
-                      if k not in self._plans and not self._leases[k].locked()]:
-                del self._leases[k]    # don't leak locks for evicted keys
 
 
 class JoinService:

@@ -1,0 +1,179 @@
+"""Runtime lock witness (repro.analysis.witness): unit semantics + the
+threaded fleet stress test cross-validating the static lock graph.
+
+The witness patches the ``threading.Lock``/``RLock`` factories so locks
+constructed under the include paths become instrumented wrappers that
+record per-thread acquisition orders by creation site.  Units prove the
+mechanics (order edges, inversion detection, self-deadlock trap,
+Condition compatibility, the ``device_get`` blocking guard); the stress
+test runs a 3-tenant mixed cold/warm fleet under the witness and
+asserts the observed orders embed into the static graph acyclically —
+the lockdep-style closing of the loop between AST analysis and reality.
+"""
+
+import threading
+import time
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.analysis.lockgraph import build_lock_graph
+from repro.analysis.witness import lock_witness
+
+REPO = Path(__file__).resolve().parents[1]
+TESTS = (str(REPO / "tests"),)
+
+
+# ---------------------------------------------------------------------------
+# unit semantics (locks created in THIS file via include_paths=tests/)
+# ---------------------------------------------------------------------------
+
+def test_locks_outside_include_paths_stay_raw():
+    with lock_witness(include_paths=(str(REPO / "src" / "repro"),)) as w:
+        lk = threading.Lock()          # created in tests/, not src/repro
+        with lk:
+            pass
+    assert w.sites == set() and w.edges == {}
+    assert type(lk) is not object and not hasattr(lk, "_site")
+
+
+def test_consistent_order_records_edges_without_cycles():
+    with lock_witness(include_paths=TESTS) as w:
+        a = threading.Lock()
+        b = threading.Lock()
+        for _ in range(3):
+            with a:
+                with b:
+                    pass
+    assert len(w.sites) == 2
+    assert len(w.edges) == 1           # a-site -> b-site only
+    ((held, acq),) = list(w.edges)
+    assert held.line < acq.line        # a constructed first
+    assert w.order_cycles() == []
+
+
+def test_inverted_order_across_threads_is_a_cycle():
+    with lock_witness(include_paths=TESTS) as w:
+        a = threading.Lock()
+        b = threading.Lock()
+
+        with a:
+            with b:
+                pass
+
+        def inverted():
+            with b:
+                with a:                # inversion: b held while taking a
+                    pass
+
+        t = threading.Thread(target=inverted)
+        t.start()
+        t.join()
+    cycles = w.order_cycles()
+    assert len(cycles) == 1 and len(cycles[0]) == 2
+
+
+def test_plain_lock_self_reacquire_raises_instead_of_hanging():
+    with lock_witness(include_paths=TESTS):
+        lk = threading.Lock()
+        with lk:
+            with pytest.raises(RuntimeError, match="self-deadlock"):
+                lk.acquire()
+
+
+def test_rlock_reentry_and_condition_compat():
+    with lock_witness(include_paths=TESTS) as w:
+        rl = threading.RLock()
+        with rl:
+            with rl:                   # reentry: legal, no self-edge
+                pass
+        cond = threading.Condition()   # backed by an instrumented RLock
+        hits = []
+
+        def waiter():
+            with cond:
+                while not hits:
+                    cond.wait(timeout=5)
+                hits.append("woke")
+
+        t = threading.Thread(target=waiter)
+        t.start()
+        time.sleep(0.05)
+        with cond:
+            hits.append("signal")
+            cond.notify()
+        t.join(timeout=5)
+        assert hits == ["signal", "woke"]
+    assert all(h != a for (h, a) in w.edges), "reentry produced a self-edge"
+
+
+def test_blocking_guard_fires_under_held_lock():
+    jax = pytest.importorskip("jax")
+    x = jax.numpy.arange(4)
+    with lock_witness(include_paths=TESTS, guard_blocking=True) as w:
+        lk = threading.Lock()
+        assert int(jax.device_get(x)[3]) == 3      # unheld: passes through
+        with lk:
+            with pytest.raises(AssertionError, match="device_get"):
+                jax.device_get(x)
+        assert len(w.blocking_violations) == 1
+    # guard uninstalled on exit
+    assert int(jax.device_get(x)[2]) == 2
+
+
+# ---------------------------------------------------------------------------
+# fleet stress test under the witness (satellite: ISSUE 10)
+# ---------------------------------------------------------------------------
+
+def _police(seed):
+    from repro.data import synth
+    return synth.police_records(n_incidents=12, reports_per_incident=2,
+                                seed=seed)
+
+
+def test_fleet_stress_under_witness_validates_static_graph():
+    """3 tenants (two sharing a corpus), 2 rounds of racing cold/warm
+    queries: every lock the serving stack takes is instrumented.  The
+    run must finish with no observed order cycle, no order that breaks
+    the static graph's acyclicity when merged in, and no blocking pull
+    under a held lock (the jax.device_get guard is armed throughout)."""
+    from repro.core.join import FDJConfig
+
+    static = build_lock_graph()
+    assert not static.findings
+
+    with lock_witness(guard_blocking=True) as w:
+        from repro.serving.fleet import JoinFleet
+
+        cfg = FDJConfig(engine="numpy", engine_opts=dict(block=64),
+                        seed=0, mc_trials=4000)
+        with JoinFleet(max_concurrent=3) as fleet:
+            fleet.add_tenant("a", _police(3), cfg)
+            fleet.add_tenant("b", _police(3), cfg)   # dedups against a
+            fleet.add_tenant("c", _police(7), cfg)
+            futures = [(name, fleet.submit(name))
+                       for _ in range(2) for name in ("a", "b", "c")]
+            pairs = {}
+            for name, fut in futures:
+                pairs.setdefault(name, []).append(fut.result(timeout=120)
+                                                  .pairs)
+            summary = fleet.drain()
+
+    assert summary["completed"] == 6 and summary["failed"] == 0
+    assert pairs["a"][0] == pairs["a"][1] == pairs["b"][0]  # shared corpus
+    assert pairs["c"][0] == pairs["c"][1]
+
+    # the witness actually saw the serving stack's locks...
+    assert w.sites, "no instrumented lock was ever created"
+    by_site = {(n.file, n.line) for n in static.nodes.values()}
+    mapped = [s for s in w.sites if (s.file, s.line) in by_site]
+    assert mapped, (
+        f"no observed creation site mapped onto a static lock node; "
+        f"sites={sorted(str(s) for s in w.sites)}")
+
+    # ...and both the observed orders alone and their union with the
+    # static graph are cycle-free
+    assert w.order_cycles() == [], w.order_cycles()
+    assert w.check_against(static) == []
+    assert w.blocking_violations == []
